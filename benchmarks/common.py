@@ -1,0 +1,96 @@
+"""Shared benchmark utilities: timing + a cached trained tiny ViT."""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CACHE = "/tmp/repro_bench_cache"
+
+
+def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def trained_tiny_vit(steps: int = 200) -> Tuple[object, dict]:
+    """Train (or load cached) a small QAT ViT on the procedural image task."""
+    from repro.configs.base import CIMModelConfig
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import DataConfig, image_batch
+    from repro.models.layers import Ctx
+    from repro.models.model import build
+    from repro.models.vit import vit_loss
+    from repro.training import optimizer as opt_mod
+    from repro.training.checkpoint import CheckpointManager
+
+    cfg = get_config("vit-small-cifar").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=4, d_model=192, d_ff=384, n_heads=4, n_kv_heads=4,
+        head_dim=48, cim=CIMModelConfig(mode="qat", policy="paper_sac"))
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+
+    ckpt = CheckpointManager(CACHE, keep=1)
+    if ckpt.latest_step() == steps:
+        (params,), _ = ckpt.restore(steps, (params,))
+        return cfg, params
+
+    opt_cfg = opt_mod.OptConfig(lr=1.5e-3, warmup_steps=15, total_steps=steps,
+                                weight_decay=0.01)
+    opt = opt_mod.init_opt_state(params)
+    dcfg = DataConfig(seed=5, global_batch=64)
+
+    @jax.jit
+    def step(params, opt, images, labels, key):
+        loss, g = jax.value_and_grad(
+            lambda p: vit_loss(p, images, labels, cfg, Ctx.make(cfg, key)))(params)
+        params, opt, _ = opt_mod.apply_updates(params, g, opt, opt_cfg)
+        return params, opt, loss
+
+    for s in range(steps):
+        x, y = image_batch(dcfg, s)
+        params, opt, _ = step(params, opt, jnp.asarray(x), jnp.asarray(y),
+                              jax.random.fold_in(jax.random.PRNGKey(1), s))
+    ckpt.save(steps, (params,))
+    return cfg, params
+
+
+def vit_eval_acc(cfg, params, mode: str, policy: str = None,
+                 noise_scale: float = 1.0, batches: int = 4) -> float:
+    from repro.core.sac import get_policy
+    from repro.data.pipeline import DataConfig, image_batch
+    from repro.models.layers import Ctx
+    from repro.models.vit import vit_accuracy
+
+    dcfg = DataConfig(seed=5, global_batch=64)
+    accs = []
+    for s in range(batches):
+        x, y = image_batch(dcfg, 2000 + s, split="eval")
+        ctx = Ctx.make(cfg, jax.random.fold_in(jax.random.PRNGKey(9), s), mode=mode)
+        if policy is not None:
+            ctx.policy = get_policy(policy)
+        if ctx.policy is not None and noise_scale != 1.0:
+            ctx.policy = dataclasses.replace(
+                ctx.policy,
+                attn=dataclasses.replace(ctx.policy.attn, noise_scale=noise_scale)
+                if ctx.policy.attn else None,
+                mlp=dataclasses.replace(ctx.policy.mlp, noise_scale=noise_scale)
+                if ctx.policy.mlp else None,
+            )
+        accs.append(float(vit_accuracy(params, jnp.asarray(x), jnp.asarray(y),
+                                       cfg, ctx)))
+    return float(np.mean(accs))

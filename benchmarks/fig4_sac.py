@@ -1,0 +1,95 @@
+"""Fig. 4 — software-analog co-design: per-block CSNR requirement + the
+2.1x efficiency ablation (None -> w/CB -> w/CB + BW-opt).
+
+The CSNR-requirement sweep reproduces the paper's motivating observation:
+the Attention block tolerates ~10 dB lower compute SNR than the MLP block.
+We sweep the injected macro noise separately for attention-class and
+MLP-class linears on a trained ViT and find each block's accuracy knee.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from benchmarks.common import trained_tiny_vit, vit_eval_acc
+from repro.core import energy
+from repro.core.sac import Policy, get_policy
+from repro.core.cim import CIMSpec
+
+
+def _acc_with_block_noise(cfg, params, block: str, scale: float) -> float:
+    base = get_policy("uniform_6b")
+    attn = dataclasses.replace(base.attn, noise_scale=scale if block == "attn" else 0.05)
+    mlp = dataclasses.replace(base.mlp, noise_scale=scale if block == "mlp" else 0.05)
+    pol = Policy(name=f"sweep_{block}_{scale}", attn=attn, mlp=mlp)
+    import repro.models.layers as L
+    import jax
+    from repro.data.pipeline import DataConfig, image_batch
+    from repro.models.vit import vit_accuracy
+    import jax.numpy as jnp
+
+    dcfg = DataConfig(seed=5, global_batch=64)
+    accs = []
+    for s in range(3):
+        x, y = image_batch(dcfg, 2000 + s, split="eval")
+        ctx = L.Ctx(cfg=cfg, mode="sim", policy=pol,
+                    key=jax.random.fold_in(jax.random.PRNGKey(11), s))
+        accs.append(float(vit_accuracy(params, jnp.asarray(x), jnp.asarray(y),
+                                       cfg, ctx)))
+    return float(np.mean(accs))
+
+
+def run() -> dict:
+    cfg, params = trained_tiny_vit()
+    ideal = vit_eval_acc(cfg, params, "off")
+
+    # sweep noise multiplier in sqrt(2) steps; CSNR shifts by -20 log10(scale)
+    scales = [2 ** (i / 2) for i in range(-2, 11)]   # 0.5 .. 32, 3 dB steps
+
+    def cliff(accs, thresh):
+        """log-interpolated scale where accuracy crosses `thresh`."""
+        prev_s, prev_a = scales[0], accs[0]
+        for s, a in zip(scales, accs):
+            if a < thresh:
+                if a != prev_a:
+                    frac = (thresh - prev_a) / (a - prev_a)
+                    return prev_s * (s / prev_s) ** max(min(frac, 1.0), 0.0)
+                return s
+            prev_s, prev_a = s, a
+        return scales[-1]
+
+    knees = {}
+    curves = {}
+    mid = (ideal + 0.1) / 2.0            # 50%-cliff: robust to eval noise
+    for block in ("attn", "mlp"):
+        accs = [_acc_with_block_noise(cfg, params, block, s) for s in scales]
+        curves[block] = dict(zip((f"{s:.2f}" for s in scales), accs))
+        knees[block] = cliff(accs, mid)
+
+    # attention tolerates `knees['attn'] / knees['mlp']` x more noise.
+    # NB: our 4-layer ViT on the easy procedural task saturates with margin,
+    # compressing the gap vs the paper's ViT-small/CIFAR 10 dB; direction
+    # (attention >> MLP tolerance — the SAC premise) is what transfers.
+    tol_db = 20 * math.log10(max(knees["attn"], 1e-9) / max(knees["mlp"], 1e-9))
+
+    em = energy.calibrated_model()
+    trace = energy.vit_small_linear_trace()
+    e_none = energy.trace_energy(trace, get_policy("uniform_8b"), em)
+    e_cb = energy.trace_energy(trace, get_policy("cb_only"), em)
+    e_sac = energy.trace_energy(trace, get_policy("paper_sac"), em)
+
+    return {
+        "ideal_acc": ideal,
+        "attn_noise_knee_scale": knees["attn"],
+        "mlp_noise_knee_scale": knees["mlp"],
+        "attn_extra_tolerance_db": tol_db,
+        "paper_attn_extra_tolerance_db": 10.0,
+        "curves": curves,
+        "ablation_efficiency_none": 1.0,
+        "ablation_efficiency_cb": e_none / e_cb,
+        "ablation_efficiency_sac_bw": e_none / e_sac,
+        "paper_efficiency_x": 2.1,
+    }

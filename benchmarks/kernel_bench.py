@@ -1,0 +1,41 @@
+"""Kernel microbenchmark: fused CIM matmul vs oracle vs plain matmul.
+
+On this CPU container the Pallas path runs in interpret mode (functional
+check only — its wall time is not meaningful); the jnp oracle vs plain-
+matmul delta measures the simulation overhead of CIM-mode serving, and the
+roofline table (EXPERIMENTS.md §Roofline) covers the TPU-side picture.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.core.cim import CIMSpec, output_noise_std_int
+from repro.kernels import ref
+
+
+def run() -> dict:
+    m, k, n = 256, 4096, 512
+    key = jax.random.PRNGKey(0)
+    kx, kw, kn = jax.random.split(key, 3)
+    xq = jax.random.randint(kx, (m, k), -31, 32, dtype=jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(kw, (k, n), -31, 32, dtype=jnp.int32).astype(jnp.int8)
+    t = -(-k // 1024)
+    noise = jax.random.normal(kn, (t, m, n), jnp.float32)
+    sigma = output_noise_std_int(CIMSpec(), 1024)
+
+    f_ref = jax.jit(lambda x, w, nz: ref.cim_matmul_ref(x, w, nz, sigma, 1024))
+    f_plain = jax.jit(lambda x, w: jnp.dot(x.astype(jnp.float32),
+                                           w.astype(jnp.float32)))
+    us_ref = time_call(f_ref, xq, wq, noise)
+    us_plain = time_call(f_plain, xq, wq)
+    flops = 2.0 * m * k * n
+    return {
+        "shape": f"{m}x{k}x{n}",
+        "cim_ref_us": us_ref,
+        "plain_matmul_us": us_plain,
+        "cim_overhead_x": us_ref / us_plain,
+        "cim_ref_gflops": flops / us_ref / 1e3,
+    }

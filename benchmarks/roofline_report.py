@@ -1,0 +1,130 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (EXPERIMENTS.md).
+
+Adds MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per cell and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs.base import get_shape
+from repro.configs.registry import get_config
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def active_params(cfg) -> int:
+    """N (dense) or N_active (MoE: shared + top-k of routed experts)."""
+    n = cfg.param_count()
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert_p = 3 * cfg.d_model * cfg.d_ff * cfg.n_layers
+        routed_total = expert_p * m.n_experts
+        routed_active = expert_p * m.top_k
+        n = n - routed_total + routed_active
+    return n
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D rule on the tokens this step actually processes."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens        # forward only
+    tokens = shape.global_batch        # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def load_rows() -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        d = json.load(open(f))
+        if d["status"] != "ok":
+            rows.append(d)
+            continue
+        cfg = get_config(d["arch"])
+        shape = get_shape(d["shape"])
+        mf = model_flops(cfg, shape)
+        hlo_global = d["per_device"]["flops"] * d["chips"]
+        d["model_flops"] = mf
+        d["useful_compute_ratio"] = mf / hlo_global if hlo_global else 0.0
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        d["roofline_fraction"] = r["compute_s"] / bound if bound else 0.0
+        rows.append(d)
+    return rows
+
+
+def run() -> dict:
+    rows = load_rows()
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    by_dom = {}
+    for r in ok:
+        by_dom[r["roofline"]["dominant"]] = by_dom.get(r["roofline"]["dominant"], 0) + 1
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": len(skipped),
+        "dominant_histogram": by_dom,
+        "worst_roofline_fraction": min(
+            (r["roofline_fraction"], r["cell"]) for r in ok),
+        "most_collective_bound": max(
+            (r["roofline"]["collective_s"] / max(r["roofline"]["compute_s"], 1e-12),
+             r["cell"]) for r in ok),
+    }
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    lines = ["| cell | kind | dominant | compute (s) | memory (s) | collective (s) "
+             "| MODEL_FLOPS | useful ratio | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['cell']} | — | *skipped: {r['reason']}* | | | | | | |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['cell']} | {r['kind']} | **{ro['dominant'].replace('_s','')}** "
+            f"| {ro['compute_s']:.3e} | {ro['memory_s']:.3e} "
+            f"| {ro['collective_s']:.3e} | {r['model_flops']:.2e} "
+            f"| {r['useful_compute_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def perf_gains() -> dict:
+    """Baseline vs optimized roofline bound per cell (EXPERIMENTS §Perf)."""
+    import math
+
+    base_dir, opt_dir = "experiments/dryrun", "experiments/dryrun_opt"
+    gains = []
+    for f in sorted(glob.glob(os.path.join(base_dir, "*.json"))):
+        tag = os.path.basename(f)
+        fo = os.path.join(opt_dir, tag)
+        if not os.path.exists(fo):
+            continue
+        a, b = json.load(open(f)), json.load(open(fo))
+        if a["status"] != "ok" or b["status"] != "ok":
+            continue
+        ba = max(a["roofline"][k] for k in ("compute_s", "memory_s", "collective_s"))
+        bo = max(b["roofline"][k] for k in ("compute_s", "memory_s", "collective_s"))
+        gains.append((ba / bo, a["cell"]))
+    if not gains:
+        return {"cells": 0}
+    gains.sort(reverse=True)
+    geo = math.exp(sum(math.log(g) for g, _ in gains) / len(gains))
+    return {
+        "cells": len(gains),
+        "geomean_gain_x": geo,
+        "best_gain_x": gains[0][0],
+        "best_cell": gains[0][1],
+        "worst_gain_x": gains[-1][0],
+        "worst_cell": gains[-1][1],
+        "cells_over_2x": sum(1 for g, _ in gains if g >= 2.0),
+    }

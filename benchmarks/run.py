@@ -1,0 +1,67 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call measured where a
+timed call exists; metric-only benches report the wall time of the analysis).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_swing, fig4_sac, fig5_column, fig6_summary,
+                            kernel_bench, roofline_report, vit_accuracy)
+
+    benches = {
+        "fig5_column": fig5_column.run,
+        "fig6_summary": fig6_summary.run,
+        "fig2_swing": fig2_swing.run,
+        "vit_accuracy": vit_accuracy.run,
+        "fig4_sac": fig4_sac.run,
+        "kernel_bench": kernel_bench.run,
+        "roofline_report": roofline_report.run,
+        "perf_gains": roofline_report.perf_gains,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    results = {}
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            out = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            derived = ";".join(f"{k}={_fmt(v)}" for k, v in out.items()
+                               if not isinstance(v, dict))
+            print(f"{name},{us:.0f},{derived}")
+            results[name] = out
+        except Exception as e:  # keep the harness going, report the failure
+            print(f"{name},0,ERROR={type(e).__name__}: {e}")
+    try:
+        import os
+        os.makedirs("experiments", exist_ok=True)
+        with open("experiments/bench_results.json", "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    except OSError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""--arch <id> registry for the 10 assigned architectures + the paper's ViT."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3_8b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "vit-small-cifar": "repro.configs.vit_small_cifar",
+}
+
+ASSIGNED: List[str] = [k for k in _MODULES if k != "vit-small-cifar"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)

@@ -1,0 +1,37 @@
+# The paper's primary contribution: a behavioural, bit-accurate model of the
+# CR-CIM macro (quantizers, reconfigured-capacitor SAR ADC with CB majority
+# voting, INL), the software-analog co-design policy, and the energy/FoM
+# model — integrated as a first-class execution mode for every linear layer
+# in the framework.
+
+from repro.core.adc import ADCSpec, sar_convert, inl_curve, conversion_noise_lsb
+from repro.core.cim import (
+    CIMSpec,
+    cim_dense,
+    cim_matmul_behavioral,
+    cim_matmul_bit_exact,
+    output_noise_std_int,
+)
+from repro.core.energy import EnergyModel, calibrated_model, sac_efficiency, snr_fom
+from repro.core.sac import Policy, ROLE_CLASS, get_policy, paper_sac, uniform_baseline
+
+__all__ = [
+    "ADCSpec",
+    "CIMSpec",
+    "EnergyModel",
+    "Policy",
+    "ROLE_CLASS",
+    "calibrated_model",
+    "cim_dense",
+    "cim_matmul_behavioral",
+    "cim_matmul_bit_exact",
+    "conversion_noise_lsb",
+    "get_policy",
+    "inl_curve",
+    "output_noise_std_int",
+    "paper_sac",
+    "sac_efficiency",
+    "sar_convert",
+    "snr_fom",
+    "uniform_baseline",
+]

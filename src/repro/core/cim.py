@@ -1,0 +1,271 @@
+"""CR-CIM macro model: quantized matmul through the analog array + SAR ADC.
+
+Macro organisation (paper Fig. 2/3, adapted per DESIGN.md):
+
+  * 1024 logical rows (1088 physical incl. dummy/reference rows). The K
+    (reduction) dimension of a matmul is tiled into ``macro_rows`` chunks;
+    each chunk's partial sum is produced in the analog domain and read out
+    through one 10-bit SAR conversion *per weight bit-plane*.
+  * weights are signed ``w_bits`` integers, bit-sliced one bit per column
+    (78 columns = 13 outputs at 6b); the MSB plane carries two's-complement
+    negative weight.
+  * activations are signed ``in_bits`` integers driven onto the rows as
+    analog amplitudes (charge ∝ IN), i.e. one shot per weight plane — no
+    input bit-serialisation.
+  * the partial sum charge stays on the cell caps which are then reconfigured
+    into the SAR C-DAC (CR-CIM's key idea): no charge redistribution, no
+    attenuation, 2x signal swing vs conventional charge CIMs.
+
+Two simulation fidelities:
+
+  * ``bit_exact``  — per (K-tile × weight-plane) SAR conversion with
+    comparator noise, majority-voting CB and capacitor-mismatch INL.
+    Used for metrics/benchmarks (column characteristics, SQNR/CSNR).
+  * ``behavioral`` — one integer matmul plus a Gaussian whose variance equals
+    the shift-add-weighted sum of per-conversion error variances (the exact
+    second-order statistic of the bit-exact chain; validated in tests).
+    Used inside large models (training QAT + serving sim) and by the Pallas
+    kernel.
+
+The ``conventional`` scheme models prior charge-redistribution CIMs [4][5]:
+the compute charge is shared into a separate ADC array (attenuation ~0.5,
+hence 2x relative comparator noise) and read with an 8-bit ADC.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.adc import (
+    ADCSpec,
+    adc_noise_error_var_lsb2,
+    adc_total_error_var_lsb2,
+    sar_convert,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMSpec:
+    """One macro operating point (what SAC switches per layer)."""
+
+    in_bits: int = 6
+    w_bits: int = 6
+    cb: bool = True                  # CSNR-Boost (6x MV on last 3 decisions)
+    macro_rows: int = 1024           # logical rows per K-tile
+    adc: ADCSpec = ADCSpec()
+    clip_sigmas: float = 34.0        # Vref fit: FS/2 = clip_sigmas * std(plane sum).
+                                     # The prototype's fixed DAC reference leaves
+                                     # large clip headroom (low range utilisation);
+                                     # calibrated so peak-CSNR = 31.3 dB (Fig. 6).
+    scheme: str = "crcim"            # "crcim" | "conventional"
+    comparator: str = "relaxed"      # "relaxed" (CR-CIM default) | "lownoise"
+                                     # lownoise: 2x lower sigma at 4x energy —
+                                     # the brute-force alternative to CB.
+    noise_scale: float = 1.0         # multiplier on the output-referred noise
+                                     # (benchmarks sweep effective CSNR with it)
+
+    # --- derived -----------------------------------------------------------
+    @property
+    def adc_bits(self) -> int:
+        return self.adc.adc_bits if self.scheme == "crcim" else 8
+
+    @property
+    def attenuation(self) -> float:
+        """Signal surviving readout: 1.0 for CR-CIM (stationary charge)."""
+        return 1.0 if self.scheme == "crcim" else 0.5
+
+    def effective_adc(self) -> ADCSpec:
+        """ADC spec seen by the signal (conventional: 8b + 2x relative noise)."""
+        sigma = self.adc.sigma_cmp
+        if self.comparator == "lownoise":
+            sigma = sigma / 2.0  # brute-force comparator: 2x noise at 4x energy
+        if self.scheme == "crcim":
+            return dataclasses.replace(self.adc, sigma_cmp=sigma)
+        # conventional: attenuation halves the swing -> comparator noise is
+        # effectively doubled relative to signal; 8b C-DAC.
+        return dataclasses.replace(
+            self.adc, adc_bits=8, sigma_cmp=sigma / self.attenuation
+        )
+
+    def analog_gain(self, x_rms_frac: float = 0.29,
+                    rows: Optional[int] = None) -> float:
+        """LSB per unit plane-sum charge.
+
+        The plane sum s_j = sum_r (x_r/qmax_x)*bit_r has std
+        ~= sqrt(R_active * E[(x/qmax)^2] * E[bit]) =: sigma_s. The
+        software-visible Vref gain is set so that clip_sigmas * sigma_s spans
+        half scale — the paper's 'peak' operating point. ``x_rms_frac`` =
+        rms(x)/qmax_x for the drive distribution (0.29 = uniform full-range).
+        ``rows``: active rows of the mapped layer (K < macro_rows maps fewer
+        rows; the per-layer Vref trim re-fits the range — without it small
+        layers would drown in conversion noise).
+        """
+        r = min(rows or self.macro_rows, self.macro_rows)
+        sigma_s = math.sqrt(r * (x_rms_frac ** 2) * 0.5)
+        half = 2 ** (self.adc_bits - 1)
+        return half / (self.clip_sigmas * sigma_s)
+
+    def conversions_per_output_tile(self) -> int:
+        return self.w_bits
+
+    def decisions_per_output_tile(self) -> int:
+        return self.w_bits * self.adc.decisions(self.cb)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact path
+# ---------------------------------------------------------------------------
+
+
+def _num_k_tiles(k: int, rows: int) -> int:
+    return -(-k // rows)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def cim_matmul_bit_exact(
+    xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec: CIMSpec
+) -> jnp.ndarray:
+    """Bit-exact macro matmul on quantized integers.
+
+    Args:
+      xq: (M, K) int32 activations in [-qmax_in, qmax_in].
+      wq: (K, N) int32 weights in [-qmax_w, qmax_w].
+      key: RNG for comparator noise.
+      spec: operating point.
+
+    Returns:
+      (M, N) float32 estimate of ``xq @ wq`` (integer product units).
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2
+    rows = spec.macro_rows
+    t = _num_k_tiles(k, rows)
+    kp = t * rows
+    xq = jnp.pad(xq, ((0, 0), (0, kp - k)))
+    wq = jnp.pad(wq, ((0, kp - k), (0, 0)))
+
+    qx = quant.qmax(spec.in_bits)
+    adc = spec.effective_adc()
+    half = 2.0 ** (spec.adc_bits - 1)
+    gain = spec.analog_gain(rows=k)
+    pw = quant.plane_weights(spec.w_bits)  # (w_bits,)
+    wplanes = quant.unsigned_bitplanes(wq, spec.w_bits)  # (w_bits, Kp, N)
+
+    x_drive = xq.astype(jnp.float32) / qx  # analog amplitude in [-1, 1]
+
+    y = jnp.zeros((m, n), jnp.float32)
+    for ti in range(t):
+        xs = jax.lax.dynamic_slice_in_dim(x_drive, ti * rows, rows, axis=1)
+        for j in range(spec.w_bits):
+            ws = jax.lax.dynamic_slice_in_dim(wplanes[j], ti * rows, rows, axis=0)
+            s = xs @ ws.astype(jnp.float32)  # plane partial sum, charge units
+            v = gain * spec.attenuation * s + half
+            v = jnp.clip(v, 0.0, 2.0 ** spec.adc_bits - 1.0)
+            code = sar_convert(v, jax.random.fold_in(key, ti * spec.w_bits + j), adc, spec.cb)
+            s_hat = (code.astype(jnp.float32) - half) / (gain * spec.attenuation)
+            y = y + pw[j].astype(jnp.float32) * s_hat * qx
+    return y
+
+
+# ---------------------------------------------------------------------------
+# behavioral path (statistically equivalent, model-scale)
+# ---------------------------------------------------------------------------
+
+
+def output_noise_std_int(spec: CIMSpec, k: int, include_static: bool = True) -> float:
+    """Std (in integer product units) of the macro error for a K-long dot.
+
+    Per conversion the code error variance is sigma_e^2 LSB^2; referred back
+    through the gain it is (sigma_e/(G*att))^2 charge units; the shift-add
+    multiplies plane j's error by pw_j and the x dequant by qmax_x; K-tiles
+    add independently.
+    """
+    adc = spec.effective_adc()
+    var_lsb = (
+        adc_total_error_var_lsb2(adc, spec.cb)
+        if include_static
+        else adc_noise_error_var_lsb2(adc, spec.cb)
+    )
+    gain = spec.analog_gain(rows=k) * spec.attenuation
+    s_bw = quant.sum_sq_plane_weights(spec.w_bits)
+    qx = quant.qmax(spec.in_bits)
+    tiles = _num_k_tiles(k, spec.macro_rows)
+    return spec.noise_scale * math.sqrt(tiles * s_bw * var_lsb) * qx / gain
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def cim_matmul_behavioral(
+    xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec: CIMSpec
+) -> jnp.ndarray:
+    """Behavioural macro matmul: exact int dot + equivalent Gaussian error."""
+    k = xq.shape[-1]
+    y = jnp.einsum(
+        "...k,kn->...n", xq.astype(jnp.int32), wq.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    sigma = output_noise_std_int(spec, k)
+    if sigma > 0.0:
+        y = y + sigma * jax.random.normal(key, y.shape, jnp.float32)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# model-facing layer op
+# ---------------------------------------------------------------------------
+
+
+def cim_dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    spec: Optional[CIMSpec],
+    key: Optional[jax.Array],
+    mode: str = "digital",
+    x_scale: Optional[jnp.ndarray] = None,
+    w_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """y = x @ w executed digitally, as QAT fake-quant, or on the CIM model.
+
+    Modes:
+      * ``digital``   — plain matmul (ideal reference).
+      * ``qat``       — STE fake-quant of x and w at the spec's precisions
+                        (+ optional noise if key given): the software half of
+                        the co-design, used for training.
+      * ``sim``       — behavioural macro execution (used at serving time).
+
+    ``x``: (..., K) float; ``w``: (K, N) float.
+    """
+    if mode == "digital" or spec is None:
+        return jnp.einsum("...k,kn->...n", x, w)
+
+    dtype = x.dtype
+    xs = x_scale if x_scale is not None else quant.abs_max_scale(x, spec.in_bits)
+    ws = w_scale if w_scale is not None else quant.abs_max_scale(w, spec.w_bits)
+
+    if mode == "qat":
+        xf = quant.fake_quant(x.astype(jnp.float32), xs, spec.in_bits)
+        wf = quant.fake_quant(w.astype(jnp.float32), ws, spec.w_bits)
+        y = jnp.einsum("...k,kn->...n", xf, wf)
+        if key is not None:
+            # noise-aware QAT: inject the macro's output-referred noise so the
+            # network learns the analog operating point it will be served at.
+            sigma = output_noise_std_int(spec, x.shape[-1], include_static=False)
+            y = y + (sigma * xs * ws) * jax.random.normal(key, y.shape, jnp.float32)
+        return y.astype(dtype)
+
+    if mode == "sim":
+        xq = quant.quantize(x.astype(jnp.float32), xs, spec.in_bits)
+        wq = quant.quantize(w.astype(jnp.float32), ws, spec.w_bits)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        y = cim_matmul_behavioral(xq, wq, key, spec)
+        return (y * xs * ws).astype(dtype)
+
+    raise ValueError(f"unknown cim mode: {mode}")

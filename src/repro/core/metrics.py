@@ -1,0 +1,112 @@
+"""SQNR / CSNR measurement on the behavioural macro (paper Figs. 5-6).
+
+Definitions (DESIGN.md §2/§4):
+
+  * **SQNR** (per Jia et al. [4]) — SNR of a single column readout chain with
+    a full-scale uniform signal; the error includes quantization, comparator
+    noise *and* static INL:  SQNR = 10 log10( var(v) / var(code - v) ).
+
+  * **CSNR** (per Gonugondla et al. [1]) — compute SNR of the full macro
+    matmul at the peak (range-fit) operating point; the error counts the
+    *random* part of the compute error (comparator-noise induced), static
+    distortion being calibratable:  CSNR = 10 log10( var(y) / var(y - E[y]) ).
+
+Both are measured by Monte-Carlo on the bit-exact model.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.adc import inl_curve, sar_convert
+from repro.core.cim import CIMSpec, cim_matmul_bit_exact
+
+
+def measure_sqnr_db(spec: CIMSpec, n_samples: int = 8192, seed: int = 3) -> float:
+    """Single-conversion SQNR with a full-scale uniform signal."""
+    adc = spec.effective_adc()
+    codes = 2 ** adc.adc_bits
+    key = jax.random.PRNGKey(seed)
+    kv, kn = jax.random.split(key)
+    v = jax.random.uniform(kv, (n_samples,), minval=0.0, maxval=float(codes - 1))
+    code = sar_convert(v, kn, adc, spec.cb)
+    err = code.astype(jnp.float32) - v
+    sig_var = float(jnp.var(v))
+    err_var = float(jnp.var(err))
+    return 10.0 * math.log10(sig_var / err_var)
+
+
+def measure_csnr_db(
+    spec: CIMSpec,
+    m: int = 64,
+    n: int = 16,
+    reps: int = 8,
+    seed: int = 5,
+) -> float:
+    """Compute-SNR of the macro matmul (noise-referred, peak operating point).
+
+    Random full-range operands; K = one macro tile. The random error is
+    isolated by repeating the conversion with independent comparator noise
+    and subtracting the per-input mean (static INL/quantization cancel).
+    """
+    k = spec.macro_rows
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kn = jax.random.split(key, 3)
+    qx, qw = quant.qmax(spec.in_bits), quant.qmax(spec.w_bits)
+    xq = jax.random.randint(kx, (m, k), -qx, qx + 1)
+    wq = jax.random.randint(kw, (k, n), -qw, qw + 1)
+
+    ys = jnp.stack(
+        [cim_matmul_bit_exact(xq, wq, jax.random.fold_in(kn, r), spec) for r in range(reps)]
+    )
+    y_mean = jnp.mean(ys, axis=0)
+    noise_var = float(jnp.mean(jnp.var(ys, axis=0))) * reps / (reps - 1)
+    exact = (xq @ wq).astype(jnp.float32)
+    sig_var = float(jnp.var(exact))
+    del y_mean
+    return 10.0 * math.log10(sig_var / noise_var)
+
+
+def measure_total_csnr_db(
+    spec: CIMSpec, m: int = 64, n: int = 16, seed: int = 5
+) -> float:
+    """CSNR counting the *total* error (incl. quantization of partial sums/INL)."""
+    k = spec.macro_rows
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kn = jax.random.split(key, 3)
+    qx, qw = quant.qmax(spec.in_bits), quant.qmax(spec.w_bits)
+    xq = jax.random.randint(kx, (m, k), -qx, qx + 1)
+    wq = jax.random.randint(kw, (k, n), -qw, qw + 1)
+    y = cim_matmul_bit_exact(xq, wq, kn, spec)
+    exact = (xq @ wq).astype(jnp.float32)
+    sig_var = float(jnp.var(exact))
+    err_var = float(jnp.var(y - exact))
+    return 10.0 * math.log10(sig_var / err_var)
+
+
+def column_characteristics(spec: CIMSpec, n_codes: int = 64, reps: int = 48,
+                           seed: int = 11) -> Dict[str, np.ndarray]:
+    """Fig. 5 reproduction: transfer curve, INL, per-code read noise."""
+    adc = spec.effective_adc()
+    codes = 2 ** adc.adc_bits
+    v = jnp.linspace(4.0, codes - 4.0, n_codes)
+    vv = jnp.tile(v, (reps, 1))
+    out = sar_convert(vv, jax.random.PRNGKey(seed), adc, spec.cb).astype(jnp.float32)
+    return {
+        "v": np.asarray(v),
+        "mean_code": np.asarray(jnp.mean(out, axis=0)),
+        "noise_lsb": np.asarray(jnp.std(out, axis=0)),
+        "inl": inl_curve(adc),
+    }
+
+
+def noise_summary(spec: CIMSpec) -> Tuple[float, float]:
+    """(avg read noise LSB w/CB-state of spec, max |INL|)."""
+    ch = column_characteristics(spec)
+    return float(np.mean(ch["noise_lsb"])), float(np.max(np.abs(ch["inl"])))

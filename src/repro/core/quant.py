@@ -1,0 +1,87 @@
+"""Quantizers for CR-CIM software-analog co-design.
+
+The macro stores signed ``w_bits`` weights in SRAM (bit-sliced, one bit per
+column) and drives rows with signed ``in_bits`` activations. Both operands use
+symmetric uniform quantization; activations use a per-tensor scale (dynamic
+abs-max or a calibrated static scale), weights a per-output-channel scale.
+
+``fake_quant`` is the straight-through-estimator (STE) version used for QAT:
+forward is quantize->dequantize, backward is identity inside the clip range.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> int:
+    """Largest magnitude representable by a signed ``bits`` integer (symmetric)."""
+    return 2 ** (bits - 1) - 1
+
+
+def abs_max_scale(x: jnp.ndarray, bits: int, axis=None, eps: float = 1e-8) -> jnp.ndarray:
+    """Symmetric scale so that max|x| maps to qmax(bits)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(amax, eps) / qmax(bits)
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize to signed integers in [-qmax, qmax] (int32)."""
+    q = qmax(bits)
+    xi = jnp.round(x / scale)
+    return jnp.clip(xi, -q, q).astype(jnp.int32)
+
+
+def dequantize(xi: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return xi.astype(jnp.float32) * scale
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize->dequantize with straight-through gradients.
+
+    Gradient is identity inside the representable range and zero outside
+    (clipped-STE), the standard QAT estimator.
+    """
+    q = qmax(bits)
+    lo, hi = -q * scale, q * scale
+    x_c = jnp.clip(x, lo, hi)
+    return _ste_round(x_c / scale) * scale
+
+
+def unsigned_bitplanes(xi: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Two's-complement bit planes of signed ints, shape (bits,) + xi.shape.
+
+    Plane ``i`` has weight ``2**i`` for i < bits-1 and ``-2**(bits-1)`` for the
+    MSB plane (two's complement). Each plane entry is 0/1 (int32).
+    """
+    u = jnp.mod(xi, 2 ** bits).astype(jnp.int32)  # two's complement bits
+    planes = [(u >> i) & 1 for i in range(bits)]
+    return jnp.stack(planes, axis=0)
+
+
+def plane_weights(bits: int) -> jnp.ndarray:
+    """Signed shift-add weights for two's-complement bit planes."""
+    w = [2 ** i for i in range(bits - 1)] + [-(2 ** (bits - 1))]
+    return jnp.asarray(w, dtype=jnp.int32)
+
+
+def sum_sq_plane_weights(bits: int) -> int:
+    """sum_j w_j^2 for the two's complement planes (noise-gain of shift-add)."""
+    return sum(4 ** i for i in range(bits - 1)) + 4 ** (bits - 1)

@@ -1,0 +1,104 @@
+"""Software-Analog Co-design (SAC) — per-layer macro operating points.
+
+The paper's observation (Fig. 4): the Attention block tolerates ~10 dB lower
+compute SNR than the MLP block. The policy therefore runs
+
+  * Attention linears at 4b/4b **wo/CB** (cheap, noisy),
+  * MLP / expert linears at 6b/6b **w/CB** (6x majority voting on the last 3
+    SAR decisions),
+
+switching CB and bit-width dynamically with the running layer. Every linear
+in the model zoo carries a *role*; the policy maps role -> CIMSpec (or None
+for digital execution: router softmax, lm head, embeddings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.cim import CIMSpec
+
+# role -> class. Weight-stationary projections all map onto the macro; which
+# noise class they belong to follows the block they feed (DESIGN.md §5-6).
+ROLE_CLASS: Dict[str, str] = {
+    "attn_qkv": "attn",
+    "attn_out": "attn",
+    "mlp_in": "mlp",
+    "mlp_out": "mlp",
+    "moe_expert": "mlp",
+    "moe_shared": "mlp",
+    "ssm_in": "mlp",      # SSM in/out projections are weight-stationary
+    "ssm_out": "mlp",     # linears; SSD scan itself runs digital (DESIGN §6)
+    "conv": "mlp",
+    "router": None,        # digital: tiny, accuracy-critical
+    "head": None,          # digital: final logits
+    "embed": None,         # lookup, not a matmul
+    "cross_qkv": "attn",
+    "cross_out": "attn",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Maps layer class -> macro operating point."""
+
+    name: str
+    attn: Optional[CIMSpec]
+    mlp: Optional[CIMSpec]
+
+    def spec_for_role(self, role: str) -> Optional[CIMSpec]:
+        cls = ROLE_CLASS.get(role, "mlp")
+        if cls is None:
+            return None
+        return self.attn if cls == "attn" else self.mlp
+
+
+def paper_sac() -> Policy:
+    """The paper's policy: attention 4b wo/CB, MLP 6b w/CB."""
+    return Policy(
+        name="paper_sac",
+        attn=CIMSpec(in_bits=4, w_bits=4, cb=False),
+        mlp=CIMSpec(in_bits=6, w_bits=6, cb=True),
+    )
+
+
+def cb_only() -> Policy:
+    """Adaptive CB without bit-width optimisation (Fig. 6 middle bar)."""
+    return Policy(
+        name="cb_only",
+        attn=CIMSpec(in_bits=6, w_bits=6, cb=False),
+        mlp=CIMSpec(in_bits=6, w_bits=6, cb=True),
+    )
+
+
+def uniform_baseline() -> Policy:
+    """No co-design: uniform 8b/8b with a brute-force low-noise comparator.
+
+    This is the operating point a Transformer needs on an accuracy-oblivious
+    analog CIM (paper intro: >8b linearity, 10b ADC): MLP-grade noise
+    everywhere, met by comparator over-design (2x noise -> 4x energy) instead
+    of majority voting.
+    """
+    spec = CIMSpec(in_bits=8, w_bits=8, cb=False, comparator="lownoise")
+    return Policy(name="uniform_8b", attn=spec, mlp=spec)
+
+
+def uniform(in_bits: int = 6, w_bits: int = 6, cb: bool = True) -> Policy:
+    spec = CIMSpec(in_bits=in_bits, w_bits=w_bits, cb=cb)
+    return Policy(name=f"uniform_{in_bits}b{'_cb' if cb else ''}", attn=spec, mlp=spec)
+
+
+POLICIES = {
+    "paper_sac": paper_sac,
+    "cb_only": cb_only,
+    "uniform_8b": uniform_baseline,
+    "uniform_6b": lambda: uniform(6, 6, True),
+    "none": None,
+}
+
+
+def get_policy(name: Optional[str]) -> Optional[Policy]:
+    if name is None or name == "none":
+        return None
+    return POLICIES[name]()

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the CR-CIM behavioural matmul.
+
+The macro quantizes *partial sums* at ``macro_rows`` (=1024) granularity: each
+K-tile's analog sum is read through the 10-bit SAR ADC before digital
+accumulation. The kernel fuses, per (bm x bn x bk) block:
+
+    int8 x int8 -> int32 MXU dot  (+)  per-K-tile readout error injection
+
+into a single VMEM-resident accumulation, so the CIM "serving" mode costs one
+extra FMA per element over a plain quantized matmul instead of a separate
+elementwise pass over the (T, M, N) partial-sum tensor in HBM.
+
+TPU mapping (DESIGN.md §2): bk == macro_rows == 1024 keeps one macro tile per
+grid step and is MXU-aligned (8x128 lanes, 128x128 systolic); bm/bn default to
+256 which keeps the working set (x 256KiB + w 256KiB + noise 256KiB + acc
+256KiB) comfortably inside VMEM. Noise is a kernel *operand* (generated with
+the standard JAX PRNG outside) so the kernel is bit-reproducible and testable
+against the pure-jnp oracle in ``ref.py``.
+
+Grid iteration order is (m, n, k) with k innermost ("arbitrary" semantics) so
+the f32 accumulator lives in a VMEM scratch across the K sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MACRO_ROWS = 1024
+
+
+def _kernel(x_ref, w_ref, n_ref, o_ref, acc_ref, *, sigma: float, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU int8 dot with int32 accumulate; the partial sum of one macro tile
+    # is exactly representable in f32 (< 2^24), so the f32 accumulator is
+    # exact for the deterministic part.
+    s = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.int32)
+    acc = acc_ref[...] + s.astype(jnp.float32)
+    if sigma > 0.0:
+        acc = acc + sigma * n_ref[0]
+    acc_ref[...] = acc
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sigma", "bm", "bn", "bk", "interpret")
+)
+def cim_matmul_pallas(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    noise: jnp.ndarray | None,
+    sigma: float = 0.0,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = MACRO_ROWS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """CIM behavioural matmul. See module docstring.
+
+    Args:
+      xq:    (M, K) int8. M, K need not be tile-aligned (padded here).
+      wq:    (K, N) int8.
+      noise: (T, M, N) float32 with T = ceil(K/bk), or None (sigma==0 path).
+      sigma: per-K-tile output-referred error std (integer product units).
+
+    Returns: (M, N) float32.
+    """
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2, (xq.shape, wq.shape)
+    n_k = -(-k // bk)
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, n_k * bk
+
+    xq = jnp.pad(xq, ((0, mp - m), (0, kp - k)))
+    wq = jnp.pad(wq, ((0, kp - k), (0, np_ - n)))
+    if noise is None:
+        noise = jnp.zeros((n_k, mp, np_), jnp.float32)
+        sigma = 0.0
+    else:
+        noise = jnp.pad(noise, ((0, 0), (0, mp - m), (0, np_ - n)))
+
+    grid = (mp // bm, np_ // bn, n_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, sigma=float(sigma), n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bm, bn), lambda i, j, kk: (kk, i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xq, wq, noise)
+    return out[:m, :n]

@@ -1,0 +1,95 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``cim_matmul``: quantize -> (kernel | oracle) -> dequantize, with a
+straight-through custom VJP so the same op is usable in QAT training. On CPU
+(this container) the kernel runs in interpret mode or falls back to the
+oracle; on TPU the Pallas path compiles natively.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.cim import CIMSpec, output_noise_std_int
+from repro.kernels import ref
+from repro.kernels.cim_matmul import MACRO_ROWS, cim_matmul_pallas
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _use_pallas() -> bool:
+    return _backend() == "tpu"
+
+
+def cim_matmul_int(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    noise: Optional[jnp.ndarray],
+    sigma: float,
+    macro_rows: int = MACRO_ROWS,
+    force: Optional[str] = None,
+) -> jnp.ndarray:
+    """Integer-domain CIM matmul; dispatches kernel vs oracle.
+
+    force: None (auto), "pallas", "pallas_interpret", "ref".
+    """
+    mode = force or ("pallas" if _use_pallas() else "ref")
+    if mode == "pallas":
+        return cim_matmul_pallas(
+            xq.astype(jnp.int8), wq.astype(jnp.int8), noise, sigma, bk=macro_rows
+        )
+    if mode == "pallas_interpret":
+        return cim_matmul_pallas(
+            xq.astype(jnp.int8), wq.astype(jnp.int8), noise, sigma,
+            bk=macro_rows, interpret=True,
+        )
+    return ref.cim_matmul_ref(xq, wq, noise, sigma, macro_rows)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def cim_matmul(x, w, spec: CIMSpec, key: Optional[jax.Array]):
+    """y ~ macro(x @ w): fused quantize -> tiled int matmul + per-tile ADC
+    error -> dequantize. Differentiable via STE (gradients flow as if the op
+    were the dequantized exact matmul)."""
+    y, _ = _cim_matmul_fwd(x, w, spec, key)
+    return y
+
+
+def _cim_matmul_fwd(x, w, spec: CIMSpec, key):
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1]).astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    xs = quant.abs_max_scale(x2, spec.in_bits)
+    ws = quant.abs_max_scale(w, spec.w_bits)
+    xq = quant.quantize(x2, xs, spec.in_bits)
+    wq = quant.quantize(w, ws, spec.w_bits)
+    m, k = xq.shape
+    n = wq.shape[1]
+    t = -(-k // spec.macro_rows)
+    sigma = output_noise_std_int(spec, spec.macro_rows)  # per single tile
+    noise = None
+    if key is not None and sigma > 0:
+        noise = jax.random.normal(key, (t, m, n), jnp.float32)
+    y = cim_matmul_int(xq, wq, noise, sigma, spec.macro_rows)
+    y = y * xs * ws
+    fq_x = quant.dequantize(xq, xs)
+    fq_w = quant.dequantize(wq, ws)
+    return y.reshape(orig_shape[:-1] + (n,)), (fq_x, fq_w, orig_shape)
+
+
+def _cim_matmul_bwd(spec, key, res, g):
+    fq_x, fq_w, orig_shape = res
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    dx = (g2 @ fq_w.T).reshape(orig_shape)
+    dw = fq_x.T @ g2
+    return dx, dw
+
+
+cim_matmul.defvjp(_cim_matmul_fwd, _cim_matmul_bwd)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose vs these)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cim_matmul_ref(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    noise: jnp.ndarray | None,
+    sigma: float,
+    macro_rows: int = 1024,
+) -> jnp.ndarray:
+    """K-tiled CIM matmul with per-tile additive readout error.
+
+    Args:
+      xq:    (M, K) int8/int32 quantized activations.
+      wq:    (K, N) int8/int32 quantized weights.
+      noise: (T, M, N) float32 unit-variance readout noise per K-tile
+             (T = ceil(K / macro_rows)), or None for the noiseless path.
+      sigma: output-referred error std per K-tile, integer product units
+             (from ``repro.core.cim.output_noise_std_int`` for one tile).
+
+    Returns:
+      (M, N) float32 macro estimate of xq @ wq.
+    """
+    m, k = xq.shape
+    _, n = wq.shape
+    t = -(-k // macro_rows)
+    kp = t * macro_rows
+    xp = jnp.pad(xq.astype(jnp.int32), ((0, 0), (0, kp - k)))
+    wp = jnp.pad(wq.astype(jnp.int32), ((0, kp - k), (0, 0)))
+    y = jnp.zeros((m, n), jnp.float32)
+    for ti in range(t):
+        xs = xp[:, ti * macro_rows : (ti + 1) * macro_rows]
+        ws = wp[ti * macro_rows : (ti + 1) * macro_rows, :]
+        s = jnp.dot(xs, ws, preferred_element_type=jnp.int32).astype(jnp.float32)
+        if noise is not None:
+            s = s + sigma * noise[ti]
+        y = y + s
+    return y
+
+
+def quantize_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric quantization oracle (matches kernels.ops fused quant)."""
+    q = 2 ** (bits - 1) - 1
+    return jnp.clip(jnp.round(x / scale), -q, q).astype(jnp.int8)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Plain softmax attention oracle for the flash kernel.
+
+    q: (BH, S, D); k, v: (BH, T, D) -> (BH, S, D), f32 softmax.
+    """
+    import jax
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bsd,btd->bst", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, tk = s.shape[-2:]
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(tk)[None, :]
+        s = jnp.where(kj <= qi, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bst,btd->bsd", p, v)

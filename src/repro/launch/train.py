@@ -1,0 +1,68 @@
+"""Training CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+      --steps 50 --batch 8 --seq 128 [--cim qat] [--compress-grads]
+
+On real hardware the same entry point runs under the production mesh
+(--mesh pod1|pod2) with the logical-axis rules installed; on this CPU
+container reduced configs train single-device.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CIMModelConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, lm_batch
+from repro.training import optimizer as opt_mod
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--cim", default=None, choices=[None, "off", "qat", "sim"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.cim:
+        cfg = dataclasses.replace(cfg, cim=CIMModelConfig(mode=args.cim,
+                                                          policy=cfg.cim.policy))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    opt_cfg = opt_mod.OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                                total_steps=args.steps)
+    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every,
+                         checkpoint_dir=args.ckpt_dir)
+
+    trainer = Trainer(cfg, opt_cfg, tcfg, lambda step: lm_batch(dcfg, step),
+                      microbatches=args.microbatches,
+                      compress_grads=args.compress_grads)
+    t0 = time.time()
+    out = trainer.run(jax.random.PRNGKey(0))
+    dt = time.time() - t0
+    m = out["metrics"]
+    print(f"done: steps={out['last_step']} loss={float(m['loss']):.4f} "
+          f"grad_norm={float(m['grad_norm']):.3f} wall={dt:.1f}s "
+          f"({dt / max(out['last_step'], 1) * 1e3:.0f} ms/step)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""Attention: GQA (llama-family), MLA (deepseek-v2), cross-attention, KV caches.
+
+All paths support three phases:
+  * train    — full causal self-attention, no cache
+  * prefill  — causal, returns a filled cache
+  * decode   — one query token against the cache (functional update)
+
+KV caches are plain pytrees so they shard/checkpoint like params. GQA cache:
+{"k": (B, S, KV, D), "v": ..., "len": ()}; MLA caches the *compressed* c_kv
+(B, S, kv_lora) + shared k_rope (B, S, rope_hd) — the arch's serving-memory
+win — and up-projects per step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, Params, _init_dense, apply_rope, dense
+from repro.distributed.sharding import shard
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- GQA
+
+def init_gqa(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    pq, aq = _init_dense(ks[0], d, h * hd, ("embed", "heads"), bias=cfg.qkv_bias, dtype=dtype)
+    pk, ak = _init_dense(ks[1], d, kv * hd, ("embed", "kv_heads"), bias=cfg.qkv_bias, dtype=dtype)
+    pv, av = _init_dense(ks[2], d, kv * hd, ("embed", "kv_heads"), bias=cfg.qkv_bias, dtype=dtype)
+    po, ao = _init_dense(ks[3], h * hd, d, ("heads", "embed"), dtype=dtype)
+    return {"q": pq, "k": pk, "v": pv, "o": po}, {"q": aq, "k": ak, "v": av, "o": ao}
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict[str, Any]:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.kv_cache_int8:
+        return {
+            "k": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+            "v": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+            "ks": jnp.zeros((batch, max_len, kv, 1), jnp.float32),
+            "vs": jnp.zeros((batch, max_len, kv, 1), jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _kv_quant(x: jnp.ndarray):
+    """Per (batch, pos, kv-head) symmetric int8: (int8 vals, f32 scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _sdpa(q, k, v, mask) -> jnp.ndarray:
+    """q: (B,S,H,D); k,v: (B,T,KV,D); mask: (B,1,S,T) or None -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def _causal_mask(s: int, t: int, offset: int = 0) -> jnp.ndarray:
+    """(1, 1, s, t) boolean causal mask; query i attends key j <= i+offset."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    return (kj <= qi)[None, None]
+
+
+def gqa_attention(
+    ctx: Ctx,
+    p: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict[str, Any]] = None,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """Self-attention; with ``cache`` acts as prefill (S>1) or decode (S==1)."""
+    cfg = ctx.cfg
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = dense(ctx, p["q"], x, "attn_qkv").reshape(b, s, h, hd)
+    k = dense(ctx, p["k"], x, "attn_qkv").reshape(b, s, kv, hd)
+    v = dense(ctx, p["v"], x, "attn_qkv").reshape(b, s, kv, hd)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # 'qseq' gives context-parallel attention when 'heads' can't take the
+    # model axis (resolver priority): scores/softmax shard over query-seq.
+    q = shard(q, "batch", "qseq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+
+    if cache is None:
+        out = _sdpa(q, k, v, _causal_mask(s, s) if causal else None)
+        new_cache = None
+    else:
+        start = cache["len"]
+        int8_cache = "ks" in cache
+        if int8_cache:
+            kq, ks_ = _kv_quant(k)
+            vq, vs_ = _kv_quant(v)
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, start, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, start, axis=1)
+            cks = jax.lax.dynamic_update_slice_in_dim(cache["ks"], ks_, start, axis=1)
+            cvs = jax.lax.dynamic_update_slice_in_dim(cache["vs"], vs_, start, axis=1)
+            new_cache = {"k": ck, "v": cv, "ks": cks, "vs": cvs, "len": start + s}
+            ck_f = (ck.astype(jnp.float32) * cks).astype(x.dtype)
+            cv_f = (cv.astype(jnp.float32) * cvs).astype(x.dtype)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), start, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), start, axis=1)
+            new_cache = {"k": ck, "v": cv, "len": start + s}
+            ck_f, cv_f = ck, cv
+        t = ck.shape[1]
+        ck_s = shard(ck_f, "batch", "seq", "kv_heads", "head_dim")
+        cv_s = shard(cv_f, "batch", "seq", "kv_heads", "head_dim")
+        # valid = causal up to start + s
+        qi = jnp.arange(s)[:, None] + start
+        kj = jnp.arange(t)[None, :]
+        mask = (kj <= qi)[None, None]
+        out = _sdpa(q, ck_s, cv_s, mask)
+
+    out = out.reshape(b, s, h * hd)
+    return dense(ctx, p["o"], out, "attn_out"), new_cache
+
+
+# ------------------------------------------------------------- cross-attn
+
+def init_cross(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    pq, aq = _init_dense(ks[0], d, h * hd, ("embed", "heads"), dtype=dtype)
+    pk, ak = _init_dense(ks[1], d, kv * hd, ("embed", "kv_heads"), dtype=dtype)
+    pv, av = _init_dense(ks[2], d, kv * hd, ("embed", "kv_heads"), dtype=dtype)
+    po, ao = _init_dense(ks[3], h * hd, d, ("heads", "embed"), dtype=dtype)
+    return {"q": pq, "k": pk, "v": pv, "o": po}, {"q": aq, "k": ak, "v": av, "o": ao}
+
+
+def cross_kv(ctx: Ctx, p: Params, memory: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Precompute encoder K/V once per request (whisper decode)."""
+    cfg = ctx.cfg
+    b, t, _ = memory.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = dense(ctx, p["k"], memory, "cross_qkv").reshape(b, t, kv, hd)
+    v = dense(ctx, p["v"], memory, "cross_qkv").reshape(b, t, kv, hd)
+    return {"k": k, "v": v}
+
+
+def cross_attention(ctx: Ctx, p: Params, x: jnp.ndarray,
+                    kv: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    cfg = ctx.cfg
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = dense(ctx, p["q"], x, "cross_qkv").reshape(b, s, h, hd)
+    out = _sdpa(q, kv["k"], kv["v"], None).reshape(b, s, h * hd)
+    return dense(ctx, p["o"], out, "cross_out")
+
+
+# ----------------------------------------------------------------- MLA
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32):
+    a = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    # q: d -> q_lora -> h*(nope+rope)
+    pdq, adq = _init_dense(ks[0], d, a.q_lora, ("embed", "state"), dtype=dtype)
+    puq, auq = _init_dense(ks[1], a.q_lora, h * (a.nope_head_dim + a.rope_head_dim),
+                           ("state", "heads"), dtype=dtype)
+    # kv: d -> kv_lora (+ shared rope dims)
+    pdkv, adkv = _init_dense(ks[2], d, a.kv_lora + a.rope_head_dim, ("embed", "state"), dtype=dtype)
+    # up: kv_lora -> h*(nope) for K and h*(v_head) for V
+    puk, auk = _init_dense(ks[3], a.kv_lora, h * a.nope_head_dim, ("state", "heads"), dtype=dtype)
+    puv, auv = _init_dense(ks[4], a.kv_lora, h * a.v_head_dim, ("state", "heads"), dtype=dtype)
+    po, ao = _init_dense(ks[5], h * a.v_head_dim, d, ("heads", "embed"), dtype=dtype)
+    return (
+        {"dq": pdq, "uq": puq, "dkv": pdkv, "uk": puk, "uv": puv, "o": po},
+        {"dq": adq, "uq": auq, "dkv": adkv, "uk": auk, "uv": auv, "o": ao},
+    )
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict[str, Any]:
+    a = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, a.kv_lora), dtype),
+        "krope": jnp.zeros((batch, max_len, a.rope_head_dim), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_attention(
+    ctx: Ctx,
+    p: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cache: Optional[Dict[str, Any]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """Multi-head Latent Attention with compressed-KV cache (deepseek-v2)."""
+    cfg = ctx.cfg
+    a = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+
+    cq = dense(ctx, p["dq"], x, "attn_qkv")
+    q = dense(ctx, p["uq"], cq, "attn_qkv").reshape(b, s, h, a.nope_head_dim + a.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [a.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = dense(ctx, p["dkv"], x, "attn_qkv")
+    ckv, krope = jnp.split(dkv, [a.kv_lora], axis=-1)
+    krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        start = cache["len"]
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), start, axis=1)
+        krope_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope.astype(cache["krope"].dtype), start, axis=1)
+        new_cache = {"ckv": ckv_all, "krope": krope_all, "len": start + s}
+        t = ckv_all.shape[1]
+        offset = start
+    else:
+        ckv_all, krope_all, new_cache, t, offset = ckv, krope, None, s, 0
+
+    scale = 1.0 / jnp.sqrt(a.nope_head_dim + a.rope_head_dim).astype(jnp.float32)
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    causal = (kj <= qi)[None, None]
+
+    if s == 1 and cache is not None:
+        # *absorbed* decode (DeepSeek-V2 §2.1.2): fold W_uk into the query and
+        # W_uv into the output so attention runs directly in the compressed
+        # latent space — O(t * kv_lora) per head instead of up-projecting the
+        # whole cache per step (which would be ~100x more FLOPs at 32k ctx).
+        wuk = p["uk"]["w"].astype(x.dtype).reshape(a.kv_lora, h, a.nope_head_dim)
+        q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, wuk)          # (b,1,h,lora)
+        logits = (
+            jnp.einsum("bshl,btl->bhst", q_lat, ckv_all)
+            + jnp.einsum("bshd,btd->bhst", q_rope, krope_all)
+        ).astype(jnp.float32) * scale
+        logits = jnp.where(causal, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out_lat = jnp.einsum("bhst,btl->bshl", probs, ckv_all)     # (b,1,h,lora)
+        wuv = p["uv"]["w"].astype(x.dtype).reshape(a.kv_lora, h, a.v_head_dim)
+        out = jnp.einsum("bshl,lhv->bshv", out_lat, wuv)
+    else:
+        # train/prefill: up-project the compressed kv once
+        k_nope = dense(ctx, p["uk"], ckv_all, "attn_qkv").reshape(b, t, h, a.nope_head_dim)
+        v = dense(ctx, p["uv"], ckv_all, "attn_qkv").reshape(b, t, h, a.v_head_dim)
+        k_nope = shard(k_nope, "batch", "seq", "heads", "head_dim")
+        v = shard(v, "batch", "seq", "heads", "head_dim")
+        logits = (
+            jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+            + jnp.einsum("bshd,btd->bhst", q_rope, krope_all)
+        ).astype(jnp.float32) * scale
+        logits = jnp.where(causal, logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+
+    out = out.reshape(b, s, h * a.v_head_dim)
+    return dense(ctx, p["o"], out, "attn_out"), new_cache

@@ -1,0 +1,193 @@
+"""Building blocks: CIM-aware dense, norms, RoPE, SwiGLU, embeddings.
+
+Parameters are plain pytrees; every init returns ``(params, axes)`` where
+``axes`` mirrors the params tree with logical-axis-name tuples used by the
+sharding rules. Every matmul goes through ``dense()`` which carries a *role*
+(attn_qkv / mlp_in / ...) so the SAC policy can pick the macro operating
+point per layer — the paper's software-analog co-design as a first-class
+framework feature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.core.cim import CIMSpec, cim_dense
+from repro.core.sac import Policy, get_policy
+from repro.distributed.sharding import shard
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-apply execution context: CIM mode, SAC policy, RNG stream."""
+
+    cfg: ModelConfig
+    mode: str = "off"                 # off | qat | sim
+    policy: Optional[Policy] = None
+    key: Optional[jax.Array] = None
+    counter: int = 0
+
+    @classmethod
+    def make(cls, cfg: ModelConfig, key: Optional[jax.Array] = None,
+             mode: Optional[str] = None) -> "Ctx":
+        mode = cfg.cim.mode if mode is None else mode
+        policy = get_policy(cfg.cim.policy) if mode != "off" else None
+        return cls(cfg=cfg, mode=mode, policy=policy, key=key)
+
+    def next_key(self) -> Optional[jax.Array]:
+        if self.key is None:
+            return None
+        self.counter += 1
+        return jax.random.fold_in(self.key, self.counter)
+
+    def spec_for(self, role: str) -> Optional[CIMSpec]:
+        if self.mode == "off" or self.policy is None:
+            return None
+        return self.policy.spec_for_role(role)
+
+
+def _init_dense(key, d_in: int, d_out: int, axes: Tuple[str, str],
+                bias: bool = False, dtype=jnp.float32, scale: float = 1.0):
+    w = jax.random.normal(key, (d_in, d_out), dtype) * (scale / jnp.sqrt(d_in))
+    p: Params = {"w": w}
+    a: Params = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        a["b"] = (axes[1],)
+    return p, a
+
+
+def dense(ctx: Ctx, p: Params, x: jnp.ndarray, role: str) -> jnp.ndarray:
+    """y = x @ w (+ b), executed per the CIM context and SAC role."""
+    w = p["w"].astype(x.dtype)
+    spec = ctx.spec_for(role)
+    if spec is None:
+        y = jnp.einsum("...k,kn->...n", x, w)
+    else:
+        k = ctx.next_key()
+        xs = _act_scale(ctx, x, spec)
+        y = cim_dense(x, w, spec, k, mode=ctx.mode, x_scale=xs)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def _act_scale(ctx: Ctx, x: jnp.ndarray, spec: CIMSpec):
+    """Per-layer Vref fit: clip activations at k*rms instead of abs-max."""
+    k = ctx.cfg.cim.act_clip_sigmas
+    if k <= 0:
+        return None
+    rms = jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32)))) + 1e-8
+    return k * rms / quant.qmax(spec.in_bits)
+
+
+# ----------------------------------------------------------------- norms
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}, {"g": ("embed",)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return (
+        {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+        {"g": ("embed",), "b": ("embed",)},
+    )
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if cos.ndim == 2:                                  # (S, D/2) -> broadcast B
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]  # (B, S, 1, D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+
+def init_swiglu(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p1, a1 = _init_dense(k1, d, f, ("embed", "mlp"), dtype=dtype)
+    p2, a2 = _init_dense(k2, d, f, ("embed", "mlp"), dtype=dtype)
+    p3, a3 = _init_dense(k3, f, d, ("mlp", "embed"), dtype=dtype)
+    return {"gate": p1, "up": p2, "down": p3}, {"gate": a1, "up": a2, "down": a3}
+
+
+def swiglu(ctx: Ctx, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = dense(ctx, p["gate"], x, "mlp_in")
+    u = dense(ctx, p["up"], x, "mlp_in")
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "seq", "mlp")
+    return dense(ctx, p["down"], h, "mlp_out")
+
+
+def init_gelu_mlp(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    p1, a1 = _init_dense(k1, d, f, ("embed", "mlp"), bias=True, dtype=dtype)
+    p2, a2 = _init_dense(k2, f, d, ("mlp", "embed"), bias=True, dtype=dtype)
+    return {"up": p1, "down": p2}, {"up": a1, "down": a2}
+
+
+def gelu_mlp(ctx: Ctx, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(dense(ctx, p["up"], x, "mlp_in"))
+    h = shard(h, "batch", "seq", "mlp")
+    return dense(ctx, p["down"], h, "mlp_out")
+
+
+# ------------------------------------------------------------- embeddings
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    e = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return {"e": e}, {"e": ("vocab", "embed")}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p["e"].astype(dtype)[tokens]
+
+
+def unembed(ctx: Ctx, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits head (digital per SAC: role 'head' maps to None)."""
+    return jnp.einsum("...d,vd->...v", x, p["e"].astype(x.dtype))
+
+
+def sinusoidal_positions(pos, d: int) -> jnp.ndarray:
+    """pos: int or (S,) array of positions -> (S, d) embeddings."""
+    if isinstance(pos, int):
+        pos = jnp.arange(pos)
+    pos = pos.astype(jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,130 @@
+"""Public model API: build any arch, get step fns + dry-run input specs.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every model input of that (arch x shape) cell — the dry-run lowers against
+these without allocating anything. Decode cells get a *filled* KV/state cache
+spec of the full context length (the assigned decode semantics: one new token
+against a seq_len cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.layers import Ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Tuple[Any, Any]]
+    loss: Callable[..., jnp.ndarray]
+    forward: Callable[..., Tuple[jnp.ndarray, Any]]
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "vit":
+        from repro.models import vit
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: vit.init_vit(cfg, key),
+            loss=lambda params, batch, key=None: vit.vit_loss(
+                params, batch["images"], batch["labels"], cfg, Ctx.make(cfg, key)),
+            forward=lambda params, batch, key=None: (
+                vit.vit_forward(params, batch["images"], cfg, Ctx.make(cfg, key)), None),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: tf.init_params(cfg, key),
+        loss=lambda params, batch, key=None: tf.lm_loss(
+            params, batch, cfg, Ctx.make(cfg, key)),
+        forward=lambda params, batch, key=None, caches=None: tf.forward(
+            params, batch, cfg, Ctx.make(cfg, key), caches),
+    )
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of this (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    it = jnp.int32
+
+    if cfg.family == "vit":
+        return {"images": _sds((b, cfg.image_size, cfg.image_size, 3), "float32"),
+                "labels": _sds((b,), it)}
+
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            n_img = min(cfg.n_patches, s // 4)
+            batch["patch_embeds"] = _sds((b, n_img, cfg.d_model), dt)
+            batch["tokens"] = _sds((b, s - n_img), it)
+            batch["labels"] = _sds((b, s - n_img), it)
+        elif cfg.family == "encdec":
+            batch["frames"] = _sds((b, cfg.n_frames, cfg.d_model), dt)
+            batch["tokens"] = _sds((b, s), it)
+            batch["labels"] = _sds((b, s), it)
+        else:
+            batch["tokens"] = _sds((b, s), it)
+            batch["labels"] = _sds((b, s), it)
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.family == "vlm":
+            n_img = min(cfg.n_patches, s // 4)
+            batch["patch_embeds"] = _sds((b, n_img, cfg.d_model), dt)
+            batch["tokens"] = _sds((b, s - n_img), it)
+        elif cfg.family == "encdec":
+            batch["frames"] = _sds((b, cfg.n_frames, cfg.d_model), dt)
+            batch["tokens"] = _sds((b, s), it)
+        else:
+            batch["tokens"] = _sds((b, s), it)
+        batch["caches"] = jax.eval_shape(lambda: tf.init_caches(cfg, b, s))
+        return batch
+
+    if shape.kind == "decode":
+        caches = jax.eval_shape(lambda: tf.init_caches(cfg, b, s))
+        if cfg.family == "encdec":
+            # cross K/V per decoder layer, built at prefill time
+            def cross_spec():
+                return {
+                    "k": jnp.zeros((cfg.n_layers, b, cfg.n_frames, cfg.n_kv_heads, cfg.hd),
+                                   jnp.dtype(dt)),
+                    "v": jnp.zeros((cfg.n_layers, b, cfg.n_frames, cfg.n_kv_heads, cfg.hd),
+                                   jnp.dtype(dt)),
+                }
+            caches = dict(caches)
+            caches["cross"] = jax.eval_shape(cross_spec)
+        return {"tokens": _sds((b, 1), it), "caches": caches}
+
+    raise ValueError(shape.kind)
+
+
+def param_specs(cfg: ModelConfig) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical-axes tree) without allocation."""
+    api = build(cfg)
+    shapes = (jax.eval_shape(lambda k: api.init(k)[0], jax.random.PRNGKey(0)),)
+    # axes trees contain strings -> rebuild eagerly from a tiny helper
+    if cfg.family == "vit":
+        from repro.models import vit
+        _, axes = vit.init_vit(cfg.reduced(), jax.random.PRNGKey(0))
+    else:
+        _, axes = tf.init_params(cfg.reduced(), jax.random.PRNGKey(0))
+    return shapes[0], axes

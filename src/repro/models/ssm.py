@@ -1,0 +1,213 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD: within-chunk quadratic (attention-like) term + cross-chunk
+recurrent state carried by a scan — O(L * chunk) work, O(1)-state decode.
+The in/out projections and depthwise conv are weight-stationary linears and
+run on the CIM macro (roles 'ssm_in'/'ssm_out'/'conv'); the selective scan
+itself is digital (DESIGN.md §6: not a weight-stationary matmul).
+
+Decode keeps {conv window (width-1), ssm state (B, H, P, N)} as the cache —
+constant per step, which is what makes long_500k runnable for this family.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, Params, _init_dense, dense
+from repro.distributed.sharding import shard
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nheads = di // s.headdim
+    return s, di, nheads
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, di, nheads = _dims(cfg)
+    conv_dim = di + 2 * s.ngroups * s.d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * s.ngroups * s.d_state + nheads
+    p_in, a_in = _init_dense(k1, cfg.d_model, d_in_proj, ("embed", "mlp"), dtype=dtype)
+    p_out, a_out = _init_dense(k2, di, cfg.d_model, ("mlp", "embed"), dtype=dtype)
+    p = {
+        "in_proj": p_in,
+        "out_proj": p_out,
+        "conv_w": jax.random.normal(k3, (s.conv_width, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+    }
+    a = {
+        "in_proj": a_in,
+        "out_proj": a_out,
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "norm_g": ("mlp",),
+    }
+    return p, a
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    s, di, nheads = _dims(cfg)
+    conv_dim = di + 2 * s.ngroups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nheads, s.headdim, s.d_state), jnp.float32),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    s, di, nheads = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _gated_norm(p: Params, y: jnp.ndarray, z: jnp.ndarray, eps: float) -> jnp.ndarray:
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + eps)
+    return (y * p["norm_g"].astype(jnp.float32)).astype(z.dtype)
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} x[..., k] (i >= j)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward (training/prefill).
+
+    x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, g, n) with g==1.
+    Returns y: (b, l, h, p), final_state: (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    assert l % chunk == 0, (l, chunk)
+
+    xb = x.reshape(b, nc, chunk, h, p)
+    dtb = dt.reshape(b, nc, chunk, h)
+    Bb = B.reshape(b, nc, chunk, -1, n)[:, :, :, 0]   # g=1 -> (b,nc,q,n)
+    Cb = C.reshape(b, nc, chunk, -1, n)[:, :, :, 0]
+
+    dA = dtb * A[None, None, None, :]                 # (b,nc,q,h) negative
+    dAc = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (attention-like with decay kernel)
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))  # (b,nc,h,q,q)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cb, Bb)    # (b,nc,q,q)
+    y_diag = jnp.einsum("bchij,bcij,bcjh,bcjhp->bcihp",
+                        Lmat, scores, dtb, xb)
+
+    # chunk states
+    decay_to_end = jnp.exp(dAc[:, :, -1:, :] - dAc)   # (b,nc,q,h)
+    S = jnp.einsum("bcjn,bcjh,bcjh,bcjhp->bchpn", Bb, decay_to_end, dtb, xb)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dAc[:, :, -1, :])           # (b,nc,h)
+
+    def step(hprev, inp):
+        dec, s_new = inp
+        hnew = hprev * dec[..., None, None] + s_new
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hT, h_before = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S.astype(jnp.float32), 1, 0)),
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)           # (b,nc,h,p,n)
+
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cb, jnp.exp(dAc), h_before)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, hT
+
+
+def mamba2_block(
+    ctx: Ctx,
+    p: Params,
+    x: jnp.ndarray,
+    cache: Optional[Dict[str, Any]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, Any]]]:
+    """x: (B, S, d). cache != None and S == 1 -> single-step decode."""
+    cfg = ctx.cfg
+    s_cfg, di, nheads = _dims(cfg)
+    b, l, _ = x.shape
+
+    zxbcdt = dense(ctx, p["in_proj"], x, "ssm_in")
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None or l > 1:
+        # train / prefill: causal depthwise conv + chunked SSD
+        w = p["conv_w"].astype(xbc.dtype)
+        pad = jnp.zeros((b, s_cfg.conv_width - 1, xbc.shape[-1]), xbc.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)
+        conv = sum(
+            xp[:, i : i + l, :] * w[i][None, None, :]
+            for i in range(s_cfg.conv_width)
+        )
+        xbc_c = jax.nn.silu(conv + p["conv_b"].astype(xbc.dtype))
+        xs, B, C = jnp.split(xbc_c, [di, di + s_cfg.ngroups * s_cfg.d_state], axis=-1)
+        xh = xs.reshape(b, l, nheads, s_cfg.headdim)
+        xh = shard(xh, "batch", "seq", "heads", None)
+        Bm = B.reshape(b, l, s_cfg.ngroups, s_cfg.d_state)
+        Cm = C.reshape(b, l, s_cfg.ngroups, s_cfg.d_state)
+        # pad seq to chunk multiple
+        q = s_cfg.chunk
+        lp = -(-l // q) * q
+        if lp != l:
+            padlen = lp - l
+            xh = jnp.pad(xh, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        y, hT = ssd_chunked(xh.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+                            Cm.astype(jnp.float32), q)
+        y = y[:, :l]
+        y = y + p["D"][None, None, :, None] * xh[:, :l].astype(jnp.float32)
+        y = y.reshape(b, l, di)
+        new_cache = None
+        if cache is not None:  # prefill: hand back the decode cache
+            win = s_cfg.conv_width - 1
+            new_cache = {"conv": xp[:, -win:, :], "state": hT}
+    else:
+        assert l == 1
+        conv_win = jnp.concatenate([cache["conv"], xbc], axis=1)  # (b, w, cd)
+        w = p["conv_w"].astype(xbc.dtype)
+        conv = jnp.einsum("bwc,wc->bc", conv_win, w) + p["conv_b"].astype(xbc.dtype)
+        xbc_c = jax.nn.silu(conv)[:, None, :]
+        xs, B, C = jnp.split(xbc_c, [di, di + s_cfg.ngroups * s_cfg.d_state], axis=-1)
+        xh = xs.reshape(b, nheads, s_cfg.headdim)
+        Bm = B.reshape(b, s_cfg.ngroups, s_cfg.d_state)[:, 0]
+        Cm = C.reshape(b, s_cfg.ngroups, s_cfg.d_state)[:, 0]
+        dt1 = dt[:, 0]                                  # (b, h)
+        dA = jnp.exp(dt1 * A[None, :])                  # (b, h)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xh.astype(jnp.float32),
+                         Bm.astype(jnp.float32))
+        state = cache["state"] * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+        y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, 1, di)
+        new_cache = {"conv": conv_win[:, 1:], "state": state}
+
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    return dense(ctx, p["out_proj"], y, "ssm_out"), new_cache

@@ -1,0 +1,450 @@
+"""Decoder-LM assembly for all assigned families.
+
+Families:
+  * dense / vlm — GQA + SwiGLU pre-norm blocks (llama pattern); vlm prepends
+    precomputed patch embeddings (stub vision frontend per assignment).
+  * moe        — attention (GQA or MLA) + MoE FFN.
+  * ssm        — Mamba2/SSD blocks (attention-free).
+  * hybrid     — zamba2: scanned super-blocks of (attn_period-1) Mamba2 layers
+                 + one *shared-weight* attention+MLP layer.
+  * encdec     — whisper: bidirectional encoder over stub frame embeddings +
+                 causal decoder with cross-attention.
+
+All layer stacks use jax.lax.scan over stacked parameters (compile time is
+O(1) in depth — essential for the 95-layer/512-chip dry-run) with optional
+jax.checkpoint (remat) on the block body. Three phases everywhere:
+train (no cache), prefill (cache fill), decode (1 token vs cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Ctx,
+    Params,
+    embed,
+    gelu_mlp,
+    init_embedding,
+    init_gelu_mlp,
+    init_layernorm,
+    init_rmsnorm,
+    init_swiglu,
+    layernorm,
+    rmsnorm,
+    sinusoidal_positions,
+    swiglu,
+    unembed,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+
+
+def _stack_init(init_one, n: int, key):
+    """vmap an init over n layers -> params stacked on a leading 'layers' axis."""
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(lambda k: init_one(k)[0])(keys)
+    axes = init_one(key)[1]  # python-side structure (dead compute under trace)
+    axes = jax.tree.map(lambda t: ("layers",) + tuple(t), axes, is_leaf=_is_axes_leaf)
+    return stacked, axes
+
+
+def scan_or_loop(cfg: ModelConfig, body, init, xs, length: int):
+    """lax.scan when cfg.scan_layers (O(1) HLO in depth) else an unrolled
+    python loop (used by the dry-run depth-extrapolation variants, where XLA
+    cost_analysis must see every layer instance)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, init, xs)
+    carry = init
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+
+
+# --------------------------------------------------------------------------
+# per-family blocks
+# --------------------------------------------------------------------------
+
+
+def _init_dense_block(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    pa, aa = attn.init_gqa(k1, cfg, dt)
+    pm, am = init_swiglu(k2, cfg.d_model, cfg.d_ff, dt)
+    pn1, an1 = init_rmsnorm(cfg.d_model, dt)
+    pn2, an2 = init_rmsnorm(cfg.d_model, dt)
+    return ({"attn": pa, "mlp": pm, "n1": pn1, "n2": pn2},
+            {"attn": aa, "mlp": am, "n1": an1, "n2": an2})
+
+
+def _dense_block(ctx: Ctx, p: Params, x, positions, cache):
+    h, new_cache = attn.gqa_attention(
+        ctx, p["attn"], rmsnorm(p["n1"], x, ctx.cfg.norm_eps), positions, cache)
+    x = x + h
+    x = x + swiglu(ctx, p["mlp"], rmsnorm(p["n2"], x, ctx.cfg.norm_eps))
+    return shard(x, "batch", "seq", "embed"), new_cache
+
+
+def _init_moe_block(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    if cfg.mla is not None:
+        pa, aa = attn.init_mla(k1, cfg, dt)
+    else:
+        pa, aa = attn.init_gqa(k1, cfg, dt)
+    pm, am = moe_mod.init_moe(k2, cfg, dt)
+    pn1, an1 = init_rmsnorm(cfg.d_model, dt)
+    pn2, an2 = init_rmsnorm(cfg.d_model, dt)
+    return ({"attn": pa, "moe": pm, "n1": pn1, "n2": pn2},
+            {"attn": aa, "moe": am, "n1": an1, "n2": an2})
+
+
+def _moe_block(ctx: Ctx, p: Params, x, positions, cache):
+    xn = rmsnorm(p["n1"], x, ctx.cfg.norm_eps)
+    if ctx.cfg.mla is not None:
+        h, new_cache = attn.mla_attention(ctx, p["attn"], xn, positions, cache)
+    else:
+        h, new_cache = attn.gqa_attention(ctx, p["attn"], xn, positions, cache)
+    x = x + h
+    x = x + moe_mod.moe_block(ctx, p["moe"], rmsnorm(p["n2"], x, ctx.cfg.norm_eps))
+    return shard(x, "batch", "seq", "embed"), new_cache
+
+
+def _init_ssm_block(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    pm, am = ssm_mod.init_mamba2(key, cfg, dt)
+    pn, an = init_rmsnorm(cfg.d_model, dt)
+    return {"mamba": pm, "n": pn}, {"mamba": am, "n": an}
+
+
+def _ssm_block(ctx: Ctx, p: Params, x, positions, cache):
+    h, new_cache = ssm_mod.mamba2_block(
+        ctx, p["mamba"], rmsnorm(p["n"], x, ctx.cfg.norm_eps), cache)
+    x = x + h
+    return shard(x, "batch", "seq", "embed"), new_cache
+
+
+_BLOCKS = {
+    "dense": (_init_dense_block, _dense_block),
+    "vlm": (_init_dense_block, _dense_block),
+    "moe": (_init_moe_block, _moe_block),
+    "ssm": (_init_ssm_block, _ssm_block),
+}
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    """Returns (params, logical-axes tree) for any LM family."""
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 4)
+    p: Params = {}
+    a: Params = {}
+    if cfg.vocab_size:
+        p["embed"], a["embed"] = init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dt)
+    p["final_norm"], a["final_norm"] = init_rmsnorm(cfg.d_model, dt)
+
+    fam = cfg.family
+    if fam in _BLOCKS:
+        init_one = _BLOCKS[fam][0]
+        p["blocks"], a["blocks"] = _stack_init(lambda k: init_one(k, cfg),
+                                               cfg.n_layers, keys[1])
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_period
+        n_mamba = cfg.attn_period - 1
+        p["mamba_blocks"], a["mamba_blocks"] = _stack_init(
+            lambda k: _stack_init(lambda kk: _init_ssm_block(kk, cfg), n_mamba, k),
+            n_super, keys[1])
+        p["shared_attn"], a["shared_attn"] = _init_dense_block(keys[2], cfg)
+    elif fam == "encdec":
+        def init_enc(k):
+            k1, k2 = jax.random.split(k)
+            pa, aa = attn.init_gqa(k1, cfg, dt)
+            pm, am = init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+            pn1, an1 = init_layernorm(cfg.d_model, dt)
+            pn2, an2 = init_layernorm(cfg.d_model, dt)
+            return ({"attn": pa, "mlp": pm, "n1": pn1, "n2": pn2},
+                    {"attn": aa, "mlp": am, "n1": an1, "n2": an2})
+
+        def init_dec(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            pa, aa = attn.init_gqa(k1, cfg, dt)
+            pc, ac = attn.init_cross(k2, cfg, dt)
+            pm, am = init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, dt)
+            pn1, an1 = init_layernorm(cfg.d_model, dt)
+            pn2, an2 = init_layernorm(cfg.d_model, dt)
+            pn3, an3 = init_layernorm(cfg.d_model, dt)
+            return ({"attn": pa, "cross": pc, "mlp": pm,
+                     "n1": pn1, "n2": pn2, "n3": pn3},
+                    {"attn": aa, "cross": ac, "mlp": am,
+                     "n1": an1, "n2": an2, "n3": an3})
+
+        p["enc_blocks"], a["enc_blocks"] = _stack_init(init_enc, cfg.n_enc_layers, keys[1])
+        p["dec_blocks"], a["dec_blocks"] = _stack_init(init_dec, cfg.n_layers, keys[2])
+        p["enc_norm"], a["enc_norm"] = init_layernorm(cfg.d_model, dt)
+    else:
+        raise ValueError(f"family {fam} not handled here (vit lives in models/vit.py)")
+    return p, a
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    """Stacked per-layer decoding caches (leading 'layers' axis)."""
+    dt = _dtype(cfg)
+
+    def stack(make, n):
+        one = make()
+        return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (n,) + t.shape), one)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return stack(lambda: attn.init_gqa_cache(cfg, batch, max_len, dt), cfg.n_layers)
+    if fam == "moe":
+        if cfg.mla is not None:
+            return stack(lambda: attn.init_mla_cache(cfg, batch, max_len, dt), cfg.n_layers)
+        return stack(lambda: attn.init_gqa_cache(cfg, batch, max_len, dt), cfg.n_layers)
+    if fam == "ssm":
+        return stack(lambda: ssm_mod.init_ssm_cache(cfg, batch, dt), cfg.n_layers)
+    if fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_period
+        n_mamba = cfg.attn_period - 1
+        return {
+            "mamba": stack(lambda: stack(lambda: ssm_mod.init_ssm_cache(cfg, batch, dt),
+                                         n_mamba), n_super),
+            "attn": stack(lambda: attn.init_gqa_cache(cfg, batch, max_len, dt), n_super),
+        }
+    if fam == "encdec":
+        return {
+            "self": stack(lambda: attn.init_gqa_cache(cfg, batch, max_len, dt), cfg.n_layers),
+            "cross": None,  # filled by prefill (encoder K/V per decoder layer)
+        }
+    raise ValueError(fam)
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+
+def _embed_input(cfg: ModelConfig, params: Params, batch: Dict[str, Any]):
+    dt = _dtype(cfg)
+    x = embed(params["embed"], batch["tokens"], dt)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(dt), x], axis=1)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _scan_blocks(ctx: Ctx, blocks: Params, block_fn, x, positions, caches):
+    cfg = ctx.cfg
+    n = jax.tree.leaves(blocks)[0].shape[0]
+    base_key = ctx.key if ctx.key is not None else jax.random.PRNGKey(0)
+
+    def body(h, xs):
+        layer_p, layer_cache, idx = xs
+        lctx = dataclasses.replace(ctx, key=jax.random.fold_in(base_key, idx), counter=0)
+        h, new_cache = block_fn(lctx, layer_p, h, positions, layer_cache)
+        return h, new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, new_caches = scan_or_loop(cfg, body, x, (blocks, caches, jnp.arange(n)), n)
+    return x, new_caches
+
+
+def forward(params: Params, batch: Dict[str, Any], cfg: ModelConfig,
+            ctx: Optional[Ctx] = None, caches=None) -> Tuple[jnp.ndarray, Any]:
+    """Forward to logits. train: caches=None; prefill/decode: caches pytree."""
+    ctx = ctx or Ctx.make(cfg)
+    if cfg.family == "encdec":
+        return _encdec_forward(params, batch, cfg, ctx, caches)
+    if cfg.family == "hybrid":
+        return _hybrid_forward(params, batch, cfg, ctx, caches)
+
+    x = _embed_input(cfg, params, batch)
+    b, s, _ = x.shape
+    if caches is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        cache_arg = None
+    else:
+        start = _cache_len(cfg, caches)
+        positions = jnp.broadcast_to(jnp.arange(s)[None] + start, (b, s))
+        cache_arg = caches
+    x, new_caches = _scan_blocks(ctx, params["blocks"], _BLOCKS[cfg.family][1],
+                                 x, positions, cache_arg)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(ctx, params["embed"], x)
+    return shard(logits, "batch", "seq", "vocab"), new_caches
+
+
+def _cache_len(cfg: ModelConfig, caches) -> jnp.ndarray:
+    if cfg.family == "ssm":
+        return jnp.zeros((), jnp.int32)  # state caches carry no length
+    if cfg.family == "hybrid":
+        return caches["attn"]["len"][0]
+    if cfg.family == "encdec":
+        return caches["self"]["len"][0]
+    return caches["len"][0]
+
+
+def _hybrid_forward(params, batch, cfg, ctx, caches=None):
+    x = _embed_input(cfg, params, batch)
+    b, s, _ = x.shape
+    if caches is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None] + _cache_len(cfg, caches), (b, s))
+    n_super = cfg.n_layers // cfg.attn_period
+    n_mamba = cfg.attn_period - 1
+    base_key = ctx.key if ctx.key is not None else jax.random.PRNGKey(0)
+
+    def body(h, xs):
+        super_p, super_cache, idx = xs
+        lctx = dataclasses.replace(ctx, key=jax.random.fold_in(base_key, idx), counter=0)
+        new_mamba, new_attn = [], None
+        for j in range(n_mamba):
+            mp = jax.tree.map(lambda t: t[j], super_p)
+            mc = None if super_cache is None else jax.tree.map(
+                lambda t: t[j], super_cache["mamba"])
+            h, nc = _ssm_block(lctx, mp, h, positions, mc)
+            new_mamba.append(nc)
+        ac = None if super_cache is None else super_cache["attn"]
+        h, new_attn = _dense_block(lctx, params["shared_attn"], h, positions, ac)
+        new_cache = None
+        if super_cache is not None:
+            new_cache = {
+                "mamba": jax.tree.map(lambda *ts: jnp.stack(ts), *new_mamba),
+                "attn": new_attn,
+            }
+        return h, new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["mamba_blocks"],
+          None if caches is None else caches,
+          jnp.arange(n_super))
+    x, new_caches = scan_or_loop(cfg, body, x, xs, n_super)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(ctx, params["embed"], x)
+    return shard(logits, "batch", "seq", "vocab"), new_caches
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ModelConfig, ctx: Ctx) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings -> memory (B, T, d)."""
+    dt = _dtype(cfg)
+    mem = frames.astype(dt)
+    mem = mem + sinusoidal_positions(mem.shape[1], cfg.d_model).astype(dt)[None]
+    mem = shard(mem, "batch", "frames", "embed")
+    base_key = ctx.key if ctx.key is not None else jax.random.PRNGKey(0)
+    enc_pos = jnp.broadcast_to(jnp.arange(mem.shape[1])[None], mem.shape[:2])
+
+    def enc_body(h, xs):
+        layer_p, idx = xs
+        lctx = dataclasses.replace(ctx, key=jax.random.fold_in(base_key, idx), counter=0)
+        hh, _ = attn.gqa_attention(lctx, layer_p["attn"],
+                                   layernorm(layer_p["n1"], h, cfg.norm_eps),
+                                   enc_pos, None, causal=False)
+        h = h + hh
+        h = h + gelu_mlp(lctx, layer_p["mlp"], layernorm(layer_p["n2"], h, cfg.norm_eps))
+        return h, None
+
+    if cfg.remat:
+        enc_body = jax.checkpoint(enc_body)
+    mem, _ = scan_or_loop(cfg, enc_body, mem,
+                          (params["enc_blocks"], jnp.arange(cfg.n_enc_layers)),
+                          cfg.n_enc_layers)
+    return layernorm(params["enc_norm"], mem, cfg.norm_eps)
+
+
+def _encdec_forward(params, batch, cfg, ctx, caches=None):
+    dt = _dtype(cfg)
+    if caches is not None and caches.get("cross") is not None:
+        cross = caches["cross"]          # precomputed at prefill
+        mem = None
+    else:
+        mem = encode(params, batch["frames"], cfg, ctx)
+        cross = None
+
+    x = embed(params["embed"], batch["tokens"], dt)
+    b, s, _ = x.shape
+    start = _cache_len(cfg, caches) if caches is not None else 0
+    pos_idx = jnp.arange(s) + start
+    x = x + sinusoidal_positions(pos_idx, cfg.d_model).astype(dt)[None]
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(pos_idx[None], (b, s))
+    base_key = ctx.key if ctx.key is not None else jax.random.PRNGKey(0)
+
+    def dec_body(h, xs):
+        layer_p, self_cache, cross_kv_l, idx = xs
+        lctx = dataclasses.replace(ctx, key=jax.random.fold_in(base_key, 1000 + idx),
+                                   counter=0)
+        hh, new_self = attn.gqa_attention(
+            lctx, layer_p["attn"], layernorm(layer_p["n1"], h, cfg.norm_eps),
+            positions, self_cache)
+        h = h + hh
+        kv = cross_kv_l if cross_kv_l is not None else attn.cross_kv(
+            lctx, layer_p["cross"], mem)
+        h = h + attn.cross_attention(lctx, layer_p["cross"],
+                                     layernorm(layer_p["n2"], h, cfg.norm_eps), kv)
+        h = h + gelu_mlp(lctx, layer_p["mlp"], layernorm(layer_p["n3"], h, cfg.norm_eps))
+        return h, (new_self, kv)
+
+    if cfg.remat:
+        dec_body = jax.checkpoint(dec_body)
+    self_caches = None if caches is None else caches["self"]
+    xs = (params["dec_blocks"], self_caches, cross, jnp.arange(cfg.n_layers))
+    x, ys = scan_or_loop(cfg, dec_body, x, xs, cfg.n_layers)
+    new_caches = None
+    if caches is not None:
+        new_self, new_cross = ys
+        new_caches = {"self": new_self, "cross": new_cross}
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(ctx, params["embed"], x)
+    return shard(logits, "batch", "seq", "vocab"), new_caches
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+
+def lm_loss(params: Params, batch: Dict[str, Any], cfg: ModelConfig,
+            ctx: Optional[Ctx] = None) -> jnp.ndarray:
+    """Next-token cross-entropy + z-loss. labels < 0 are masked."""
+    logits, _ = forward(params, batch, cfg, ctx)
+    labels = batch["labels"]
+    if cfg.family == "vlm":      # image prefix carries no labels
+        logits = logits[:, -labels.shape[1]:]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    zloss = 1e-4 * jnp.square(jax.nn.logsumexp(logits, axis=-1))
+    return jnp.sum((nll + zloss) * valid) / jnp.maximum(jnp.sum(valid), 1)

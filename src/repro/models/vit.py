@@ -1,0 +1,109 @@
+"""ViT-small for the paper's CIFAR-10 demonstration (Fig. 6).
+
+The patch embedding is a weight-stationary linear (on the macro, role
+'mlp_in' class), attention/MLP blocks reuse the shared layer library so the
+SAC policy (attention 4b wo/CB, MLP 6b w/CB) applies exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    Ctx,
+    Params,
+    _init_dense,
+    dense,
+    gelu_mlp,
+    init_gelu_mlp,
+    init_layernorm,
+    layernorm,
+)
+
+
+def patchify(images: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, n_patches, patch*patch*C)."""
+    b, h, w, c = images.shape
+    nh, nw = h // patch, w // patch
+    x = images.reshape(b, nh, patch, nw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, nh * nw, patch * patch * c)
+
+
+def init_vit(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    patch_dim = cfg.patch_size ** 2 * 3
+    n_patches = (cfg.image_size // cfg.patch_size) ** 2
+    ks = jax.random.split(key, 6)
+
+    pe, ae = _init_dense(ks[0], patch_dim, d, ("patch", "embed"), bias=True)
+    p: Params = {
+        "patch": pe,
+        "cls": jax.random.normal(ks[1], (1, 1, d)) * 0.02,
+        "pos": jax.random.normal(ks[2], (1, n_patches + 1, d)) * 0.02,
+    }
+    a: Params = {"patch": ae, "cls": (None, None, "embed"), "pos": (None, None, "embed")}
+
+    def init_block(k):
+        k1, k2 = jax.random.split(k)
+        pa, aa = attn.init_gqa(k1, cfg, jnp.float32)
+        pm, am = init_gelu_mlp(k2, d, cfg.d_ff)
+        pn1, an1 = init_layernorm(d)
+        pn2, an2 = init_layernorm(d)
+        return ({"attn": pa, "mlp": pm, "n1": pn1, "n2": pn2},
+                {"attn": aa, "mlp": am, "n1": an1, "n2": an2})
+
+    from repro.models.transformer import _stack_init
+
+    p["blocks"], a["blocks"] = _stack_init(init_block, cfg.n_layers, ks[3])
+    p["head_norm"], a["head_norm"] = init_layernorm(d)
+    ph, ah = _init_dense(ks[4], d, cfg.n_classes, ("embed", "classes"), bias=True)
+    p["head"], a["head"] = ph, ah
+    return p, a
+
+
+def vit_forward(params: Params, images: jnp.ndarray, cfg: ModelConfig,
+                ctx: Optional[Ctx] = None) -> jnp.ndarray:
+    """images: (B, H, W, C) float in [0,1] -> logits (B, n_classes)."""
+    ctx = ctx or Ctx.make(cfg)
+    x = patchify(images.astype(jnp.float32), cfg.patch_size)
+    x = dense(ctx, params["patch"], x, "mlp_in")
+    b = x.shape[0]
+    cls = jnp.broadcast_to(params["cls"], (b, 1, x.shape[-1]))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    base_key = ctx.key if ctx.key is not None else jax.random.PRNGKey(0)
+
+    def body(h, xs):
+        layer_p, idx = xs
+        lctx = dataclasses.replace(ctx, key=jax.random.fold_in(base_key, idx), counter=0)
+        hh, _ = attn.gqa_attention(lctx, layer_p["attn"],
+                                   layernorm(layer_p["n1"], h, cfg.norm_eps),
+                                   positions, None, causal=False)
+        h = h + hh
+        h = h + gelu_mlp(lctx, layer_p["mlp"], layernorm(layer_p["n2"], h, cfg.norm_eps))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+    x = layernorm(params["head_norm"], x, cfg.norm_eps)
+    return dense(ctx, params["head"], x[:, 0], "head")
+
+
+def vit_loss(params: Params, images: jnp.ndarray, labels: jnp.ndarray,
+             cfg: ModelConfig, ctx: Optional[Ctx] = None) -> jnp.ndarray:
+    logits = vit_forward(params, images, cfg, ctx).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def vit_accuracy(params: Params, images: jnp.ndarray, labels: jnp.ndarray,
+                 cfg: ModelConfig, ctx: Optional[Ctx] = None) -> jnp.ndarray:
+    logits = vit_forward(params, images, cfg, ctx)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

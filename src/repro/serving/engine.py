@@ -1,0 +1,115 @@
+"""Batched serving engine: prefill + decode with KV caches, CIM-sim linears.
+
+Slot-based continuous batching (vLLM-lite): a fixed decode batch of
+``max_slots`` sequences; finished sequences release their slot and the next
+queued request is prefilled into it. Prefill and decode are two jitted
+programs (the dry-run lowers exactly these for the serve shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import Ctx
+from repro.models.model import build
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    out_tokens: Optional[List[int]] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
+                 max_len: int = 512, cim_mode: Optional[str] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.key = jax.random.PRNGKey(seed)
+        mode = cim_mode if cim_mode is not None else cfg.cim.mode
+
+        def prefill_fn(params, batch, caches, key):
+            ctx = Ctx.make(cfg, key, mode=mode)
+            logits, caches = tf.forward(params, batch, cfg, ctx, caches)
+            return logits[:, -1], caches
+
+        def decode_fn(params, tokens, caches, key):
+            ctx = Ctx.make(cfg, key, mode=mode)
+            logits, caches = tf.forward(params, {"tokens": tokens}, cfg, ctx, caches)
+            return logits[:, -1], caches
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------ API
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        """Run all requests to completion; returns generated token lists."""
+        cfg = self.cfg
+        queue = list(requests)
+        for r in queue:
+            r.out_tokens = []
+        results: List[List[int]] = [None] * len(requests)  # type: ignore
+        req_index = {id(r): i for i, r in enumerate(requests)}
+
+        # one cache per slot (batch=1 caches, concatenated logically)
+        slots: List[Optional[Request]] = [None] * self.max_slots
+        caches = [tf.init_caches(cfg, 1, self.max_len) for _ in range(self.max_slots)]
+        last_tok = [0] * self.max_slots
+        steps = 0
+
+        def try_fill_slots():
+            for s in range(self.max_slots):
+                if slots[s] is None and queue:
+                    r = queue.pop(0)
+                    slots[s] = r
+                    fresh = tf.init_caches(cfg, 1, self.max_len)
+                    logits, caches[s] = self._prefill(
+                        self.params, {"tokens": jnp.asarray(r.prompt)[None]},
+                        fresh, self._next_key())
+                    last_tok[s] = self._sample(logits[0], r.temperature)
+                    r.out_tokens.append(int(last_tok[s]))
+
+        try_fill_slots()
+        while any(s is not None for s in slots):
+            # batched decode over active slots (ragged -> loop; a production
+            # engine fuses slots into one batch-axis program)
+            for s in range(self.max_slots):
+                r = slots[s]
+                if r is None:
+                    continue
+                logits, caches[s] = self._decode(
+                    self.params, jnp.asarray([[last_tok[s]]], jnp.int32),
+                    caches[s], self._next_key())
+                tok = self._sample(logits[0], r.temperature)
+                r.out_tokens.append(int(tok))
+                last_tok[s] = tok
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    results[req_index[id(r)]] = r.out_tokens
+                    slots[s] = None
+            try_fill_slots()
+            steps += 1
+            if steps > 10_000:
+                raise RuntimeError("serving engine ran away")
+        return results
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _sample(self, logits: jnp.ndarray, temperature: float) -> int:
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, k = jax.random.split(self.key)
+        return int(jax.random.categorical(k, logits / temperature))

@@ -1,0 +1,82 @@
+"""AdamW with f32 master weights, global-norm clipping, cosine schedule.
+
+Hand-rolled (no optax in this container) but production-shaped: the
+optimizer state mirrors the parameter tree so it inherits the params'
+NamedShardings (ZeRO-style: m/v/master shard exactly like their params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def init_opt_state(params: Any) -> Dict[str, Any]:
+    f32 = lambda t: jnp.zeros(t.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        # copy=True: master must not alias params (donation safety)
+        "master": jax.tree.map(lambda t: jnp.array(t, jnp.float32, copy=True), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(t.astype(jnp.float32)))
+                        for t in jax.tree.leaves(tree)))
+
+
+def apply_updates(params: Any, grads: Any, state: Dict[str, Any],
+                  cfg: OptConfig) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m2, v2, new_master
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    new_state = {"m": m, "v": v, "master": master, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

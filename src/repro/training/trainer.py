@@ -1,0 +1,137 @@
+"""Training loop: microbatched step factory + fault-tolerant driver.
+
+``make_train_step`` builds the jit-able (params, opt, batch, key) -> ... step
+with gradient accumulation over microbatches (lax.scan, so the HLO stays
+O(1) in the accumulation factor) and optional int8 gradient compression.
+
+``Trainer`` is the driver: checkpoint/restart (auto-resume from latest),
+preemption-signal save, step-deadline straggler watchdog (skip-and-log), and
+elastic restore onto a different mesh via CheckpointManager shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import compression
+from repro.models.model import build
+from repro.training import optimizer as opt_mod
+from repro.training.checkpoint import CheckpointManager
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_mod.OptConfig,
+                    microbatches: int = 1, compress_grads: bool = False):
+    """Returns train_step(params, opt_state, batch, key) -> (p, o, metrics)."""
+    api = build(cfg)
+
+    def loss_fn(params, batch, key):
+        return api.loss(params, batch, key)
+
+    def grads_of(params, batch, key):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch, key)
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def body(acc, mb_i):
+            mb, i = mb_i
+            l, g = jax.value_and_grad(loss_fn)(params, mb, jax.random.fold_in(key, i))
+            acc_l, acc_g = acc
+            return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+        zero = (jnp.zeros(()),
+                jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), params))
+        (tot_l, tot_g), _ = jax.lax.scan(body, zero, (mbs, jnp.arange(microbatches)))
+        inv = 1.0 / microbatches
+        return tot_l * inv, jax.tree.map(lambda g: g * inv, tot_g)
+
+    def train_step(params, opt_state, batch, key):
+        loss, grads = grads_of(params, batch, key)
+        if compress_grads:
+            grads = compression.simulate_compression(
+                grads, jax.random.fold_in(key, 0x5EED))
+        params, opt_state, info = opt_mod.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **info}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    step_deadline_s: float = 0.0   # >0: watchdog logs steps over deadline
+    log_every: int = 10
+
+
+class Trainer:
+    """Fault-tolerant single-controller driver (multi-host ready: the data
+    pipeline is host-sharded and the checkpoint path is process-0 only in a
+    real deployment — this container runs one process)."""
+
+    def __init__(self, cfg: ModelConfig, opt_cfg: opt_mod.OptConfig,
+                 tcfg: TrainerConfig, data_iter_fn: Callable[[int], Any],
+                 microbatches: int = 1, compress_grads: bool = False,
+                 donate: bool = True):
+        self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.data_iter_fn = data_iter_fn
+        self.api = build(cfg)
+        step = make_train_step(cfg, opt_cfg, microbatches, compress_grads)
+        self.train_step = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep)
+        self._preempted = False
+        self.slow_steps = []
+
+    def _install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not on main thread (tests)
+
+    def run(self, key: jax.Array, resume: bool = True) -> Dict[str, Any]:
+        self._install_preemption_handler()
+        params, _ = self.api.init(key)
+        opt_state = opt_mod.init_opt_state(params)
+        start = 0
+        if resume:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                (params, opt_state), meta = self.ckpt.restore(
+                    latest, (params, opt_state))
+                start = meta["step"]
+
+        metrics = {}
+        for step in range(start, self.tcfg.total_steps):
+            batch = self.data_iter_fn(step)
+            batch = jax.tree.map(jnp.asarray, batch)
+            t0 = time.monotonic()
+            params, opt_state, metrics = self.train_step(
+                params, opt_state, batch, jax.random.fold_in(key, step))
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            if self.tcfg.step_deadline_s and dt > self.tcfg.step_deadline_s:
+                # straggler mitigation: log + continue (a real deployment
+                # would also report to the coordinator for hot-swap)
+                self.slow_steps.append((step, dt))
+            if (step + 1) % self.tcfg.checkpoint_every == 0 or self._preempted:
+                self.ckpt.save(step + 1, (params, opt_state),
+                               extra={"data_step": step + 1})
+            if self._preempted:
+                break
+        return {"params": params, "opt_state": opt_state, "metrics": metrics,
+                "last_step": step + 1, "slow_steps": self.slow_steps}

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# smoke tests and benches must see 1 device (dry-run sets 512 in ITS process
+# only); make CPU explicit and keep test x64 behaviour default.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

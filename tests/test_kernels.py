@@ -1,0 +1,132 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweep in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cim import CIMSpec
+from repro.kernels import ops, ref
+from repro.kernels.cim_matmul import cim_matmul_pallas
+
+SHAPES = [
+    (8, 512, 8),          # sub-tile K
+    (64, 1024, 32),       # exactly one macro tile
+    (100, 2048, 130),     # ragged M/N, two tiles
+    (256, 3072, 256),     # three tiles, MXU-aligned
+    (1, 1024, 1),         # degenerate vector
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_kernel_matches_oracle(m, k, n):
+    key = jax.random.PRNGKey(m * 7 + k + n)
+    kx, kw, kn = jax.random.split(key, 3)
+    xq = jax.random.randint(kx, (m, k), -31, 32, dtype=jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(kw, (k, n), -31, 32, dtype=jnp.int32).astype(jnp.int8)
+    t = -(-k // 1024)
+    noise = jax.random.normal(kn, (t, m, n), jnp.float32)
+    y_k = cim_matmul_pallas(xq, wq, noise, sigma=3.5, interpret=True)
+    y_r = ref.cim_matmul_ref(xq, wq, noise, 3.5, 1024)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-6, atol=1e-2)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:3])
+def test_kernel_noiseless_exact(m, k, n):
+    """sigma=0 path must equal the integer matmul exactly."""
+    key = jax.random.PRNGKey(k + 13)
+    kx, kw = jax.random.split(key)
+    xq = jax.random.randint(kx, (m, k), -127, 128, dtype=jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(kw, (k, n), -127, 128, dtype=jnp.int32).astype(jnp.int8)
+    y = cim_matmul_pallas(xq, wq, None, sigma=0.0, interpret=True)
+    exact = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(exact).astype(np.float32))
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    m=st.integers(1, 96),
+    kt=st.integers(1, 3),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_property_sweep(m, kt, n, seed):
+    """Property: kernel == oracle for random raggedness and tile counts."""
+    k = kt * 512 + (seed % 97)
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kn = jax.random.split(key, 3)
+    xq = jax.random.randint(kx, (m, k), -15, 16, dtype=jnp.int32).astype(jnp.int8)
+    wq = jax.random.randint(kw, (k, n), -15, 16, dtype=jnp.int32).astype(jnp.int8)
+    t = -(-k // 1024)
+    noise = jax.random.normal(kn, (t, m, n), jnp.float32)
+    y_k = cim_matmul_pallas(xq, wq, noise, sigma=1.7, interpret=True)
+    y_r = ref.cim_matmul_ref(xq, wq, noise, 1.7, 1024)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-6, atol=1e-2)
+
+
+def test_ops_wrapper_and_ste_grad():
+    spec = CIMSpec()
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (16, 1024))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (1024, 8))
+    y = ops.cim_matmul(x, w, spec, jax.random.fold_in(key, 2))
+    assert y.shape == (16, 8) and np.all(np.isfinite(np.asarray(y)))
+    gx, gw = jax.grad(lambda x, w: ops.cim_matmul(x, w, spec, None).sum(),
+                      argnums=(0, 1))(x, w)
+    # STE backward equals the fake-quant matmul backward: g @ wq^T, xq^T @ g
+    assert gx.shape == x.shape and gw.shape == w.shape
+    assert np.all(np.isfinite(np.asarray(gx)))
+
+
+def test_ops_batched_input():
+    spec = CIMSpec()
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (2, 5, 1024))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (1024, 12))
+    y = ops.cim_matmul(x, w, spec, None)
+    assert y.shape == (2, 5, 12)
+    rel = (jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert float(rel) < 0.1  # noiseless (key=None) -> quantization error only
+
+
+# ---------------------------------------------------------------- flash attn
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+FLASH_SHAPES = [
+    (4, 256, 256, 64, True),    # square causal, block-aligned
+    (2, 200, 200, 64, True),    # ragged causal
+    (3, 128, 384, 128, False),  # cross-attention (non-causal, t > s)
+    (1, 130, 257, 64, True),    # ragged both dims
+]
+
+
+@pytest.mark.parametrize("bh,s,t,d,causal", FLASH_SHAPES)
+def test_flash_attention_matches_oracle(bh, s, t, d, causal):
+    key = jax.random.PRNGKey(s + t)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, s, d))
+    k = jax.random.normal(kk, (bh, t, d))
+    v = jax.random.normal(kv, (bh, t, d))
+    y = flash_attention(q, k, v, causal=causal, interpret=True)
+    y_ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=8)
+@given(s=st.integers(16, 200), d=st.sampled_from([64, 128]),
+       seed=st.integers(0, 2**31 - 1))
+def test_flash_attention_property(s, d, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, s, d))
+    k = jax.random.normal(kk, (2, s, d))
+    v = jax.random.normal(kv, (2, s, d))
+    y = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                        interpret=True)
+    y_ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,67 @@
+"""Quantizer unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@given(bits=st.integers(2, 10))
+def test_qmax(bits):
+    assert quant.qmax(bits) == 2 ** (bits - 1) - 1
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    bits=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+    scale_exp=st.floats(-3, 3),
+)
+def test_quantize_roundtrip_error_bounded(bits, seed, scale_exp):
+    """|dequant(quant(x)) - x| <= scale/2 inside the representable range."""
+    rng = np.random.default_rng(seed)
+    scale = float(10.0 ** scale_exp)
+    q = quant.qmax(bits)
+    x = rng.uniform(-q * scale, q * scale, size=(64,)).astype(np.float32)
+    xi = quant.quantize(jnp.asarray(x), jnp.float32(scale), bits)
+    xr = quant.dequantize(xi, jnp.float32(scale))
+    assert np.max(np.abs(np.asarray(xr) - x)) <= scale / 2 + 1e-6 * scale
+    assert int(jnp.max(jnp.abs(xi))) <= q
+
+
+@settings(deadline=None, max_examples=25)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_bitplane_reconstruction_exact(bits, seed):
+    """Two's-complement planes weighted by plane_weights reproduce the ints."""
+    rng = np.random.default_rng(seed)
+    q = quant.qmax(bits)
+    xi = jnp.asarray(rng.integers(-q, q + 1, size=(37,)), jnp.int32)
+    planes = quant.unsigned_bitplanes(xi, bits)
+    w = quant.plane_weights(bits)
+    rec = jnp.einsum("b...,b->...", planes, w)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(xi))
+
+
+def test_sum_sq_plane_weights():
+    for bits in range(2, 9):
+        w = np.asarray(quant.plane_weights(bits), np.int64)
+        assert quant.sum_sq_plane_weights(bits) == int(np.sum(w.astype(np.int64) ** 2))
+
+
+def test_ste_gradient_identity_inside_range():
+    scale = jnp.float32(0.1)
+    f = lambda x: jnp.sum(quant.fake_quant(x, scale, 6))
+    x = jnp.asarray([0.05, -0.2, 0.31])
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0, atol=1e-6)
+
+
+def test_fake_quant_is_quant_dequant():
+    x = jnp.linspace(-1, 1, 101)
+    scale = quant.abs_max_scale(x, 5)
+    fq = quant.fake_quant(x, scale, 5)
+    qd = quant.dequantize(quant.quantize(x, scale, 5), scale)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(qd), atol=1e-6)

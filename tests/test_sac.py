@@ -1,0 +1,54 @@
+"""SAC policy: role mapping and the paper's operating points."""
+
+import pytest
+
+from repro.core.sac import ROLE_CLASS, get_policy
+
+
+def test_paper_policy_operating_points():
+    p = get_policy("paper_sac")
+    attn = p.spec_for_role("attn_qkv")
+    mlp = p.spec_for_role("mlp_in")
+    assert attn.in_bits == 4 and attn.w_bits == 4 and attn.cb is False
+    assert mlp.in_bits == 6 and mlp.w_bits == 6 and mlp.cb is True
+
+
+def test_digital_roles():
+    p = get_policy("paper_sac")
+    for role in ("router", "head", "embed"):
+        assert p.spec_for_role(role) is None
+
+
+def test_ssm_roles_map_to_mlp_class():
+    """DESIGN.md §6: SSM projections are weight-stationary -> MLP class."""
+    p = get_policy("paper_sac")
+    for role in ("ssm_in", "ssm_out", "conv"):
+        spec = p.spec_for_role(role)
+        assert spec is not None and spec.cb is True
+
+
+def test_moe_experts_get_mlp_point():
+    p = get_policy("paper_sac")
+    spec = p.spec_for_role("moe_expert")
+    assert spec.in_bits == 6 and spec.cb is True
+
+
+def test_unknown_role_defaults_to_mlp_class():
+    p = get_policy("paper_sac")
+    assert p.spec_for_role("future_linear").cb is True
+
+
+def test_baseline_policy():
+    b = get_policy("uniform_8b")
+    s = b.spec_for_role("attn_qkv")
+    assert s.in_bits == 8 and s.comparator == "lownoise" and not s.cb
+
+
+def test_role_table_covers_model_zoo_roles():
+    used = {"attn_qkv", "attn_out", "mlp_in", "mlp_out", "moe_expert", "router",
+            "head", "embed", "ssm_in", "ssm_out", "cross_qkv", "cross_out"}
+    assert used <= set(ROLE_CLASS)
+
+
+def test_none_policy():
+    assert get_policy("none") is None and get_policy(None) is None

@@ -1,0 +1,94 @@
+"""End-to-end behaviour: the paper's central claim, in miniature.
+
+Train a small ViT with noise-aware QAT (the software half of the co-design),
+then evaluate (a) ideal digital, (b) CIM-sim with the paper's SAC policy —
+accuracy must be close to ideal (paper: 95.8 vs 96.8 on CIFAR-10), and
+(c) show the SAC energy win on the same model.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CIMModelConfig
+from repro.configs.registry import get_config
+from repro.core import energy
+from repro.data.pipeline import DataConfig, image_batch
+from repro.models.layers import Ctx
+from repro.models.vit import vit_accuracy, vit_loss
+from repro.models.model import build
+from repro.training import optimizer as opt_mod
+
+
+@pytest.fixture(scope="module")
+def trained_vit():
+    cfg = get_config("vit-small-cifar").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_layers=3, d_model=128, d_ff=256, n_heads=4, n_kv_heads=4,
+        head_dim=32, cim=CIMModelConfig(mode="qat", policy="paper_sac"))
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    opt_cfg = opt_mod.OptConfig(lr=1.5e-3, warmup_steps=10, total_steps=150,
+                                weight_decay=0.01)
+    opt = opt_mod.init_opt_state(params)
+    dcfg = DataConfig(seed=5, global_batch=64)
+
+    @jax.jit
+    def step(params, opt, images, labels, key):
+        loss, g = jax.value_and_grad(
+            lambda p: vit_loss(p, images, labels, cfg, Ctx.make(cfg, key)))(params)
+        params, opt, _ = opt_mod.apply_updates(params, g, opt, opt_cfg)
+        return params, opt, loss
+
+    for s in range(150):
+        x, y = image_batch(dcfg, s)
+        params, opt, loss = step(params, opt, jnp.asarray(x), jnp.asarray(y),
+                                 jax.random.fold_in(jax.random.PRNGKey(1), s))
+    return cfg, params
+
+
+def _eval_acc(cfg, params, mode, seed=0):
+    dcfg = DataConfig(seed=5, global_batch=64)
+    accs = []
+    for s in range(4):
+        x, y = image_batch(dcfg, 1000 + s, split="eval")
+        ctx = Ctx.make(cfg, jax.random.fold_in(jax.random.PRNGKey(seed), s),
+                       mode=mode)
+        accs.append(float(vit_accuracy(params, jnp.asarray(x), jnp.asarray(y),
+                                       cfg, ctx)))
+    return float(np.mean(accs))
+
+
+def test_vit_qat_learns(trained_vit):
+    cfg, params = trained_vit
+    acc = _eval_acc(cfg, params, "off")
+    assert acc > 0.85, acc
+
+
+def test_cim_inference_close_to_ideal(trained_vit):
+    """The paper's headline: CIM inference within ~1-2 points of ideal."""
+    cfg, params = trained_vit
+    ideal = _eval_acc(cfg, params, "off")
+    cim = _eval_acc(cfg, params, "sim")
+    assert ideal - cim < 0.05, (ideal, cim)
+
+
+def test_sac_energy_cheaper_at_same_accuracy(trained_vit):
+    """SAC holds accuracy at materially lower energy than uniform 6b w/CB."""
+    cfg, params = trained_vit
+    sac = _eval_acc(cfg, params, "sim")
+    em = energy.calibrated_model()
+    from repro.core.sac import get_policy
+    trace = energy.vit_small_linear_trace()
+    e_sac = energy.trace_energy(trace, get_policy("paper_sac"), em)
+    e_uni = energy.trace_energy(trace, get_policy("uniform_6b"), em)
+    assert e_uni > 1.2 * e_sac
+    assert sac > 0.80
+
+
+def test_sac_energy_improvement():
+    em = energy.calibrated_model()
+    assert energy.sac_efficiency(em) > 2.0

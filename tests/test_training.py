@@ -1,0 +1,143 @@
+"""Training substrate: convergence, microbatching, compression, checkpoints."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, lm_batch
+from repro.distributed import compression
+from repro.training import optimizer as opt_mod
+from repro.training.checkpoint import CheckpointManager
+from repro.training.trainer import Trainer, TrainerConfig, make_train_step
+
+
+def tiny_cfg():
+    cfg = get_config("qwen2-0.5b").reduced()
+    return dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=256,
+                               vocab_size=256, n_heads=4, n_kv_heads=2,
+                               head_dim=32)
+
+
+def test_loss_decreases(tmp_path):
+    cfg = tiny_cfg()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    opt_cfg = opt_mod.OptConfig(lr=2e-3, warmup_steps=2, total_steps=30)
+    tcfg = TrainerConfig(total_steps=30, checkpoint_every=1000,
+                         checkpoint_dir=str(tmp_path))
+    tr = Trainer(cfg, opt_cfg, tcfg, lambda s: lm_batch(dcfg, s))
+    out = tr.run(jax.random.PRNGKey(0), resume=False)
+    final = float(out["metrics"]["loss"])
+    assert final < 5.0, final  # from ~ln(256)+structure ~ 5.5 at init
+
+
+def test_microbatch_equivalence():
+    """Accumulated-microbatch gradients == full-batch step (same numerics)."""
+    cfg = tiny_cfg()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    opt_cfg = opt_mod.OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    step1 = make_train_step(cfg, opt_cfg, microbatches=1)
+    step4 = make_train_step(cfg, opt_cfg, microbatches=4)
+    from repro.models.model import build
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    opt = opt_mod.init_opt_state(params)
+    batch = jax.tree.map(jnp.asarray, lm_batch(dcfg, 0))
+    key = jax.random.PRNGKey(1)
+    p1, _, m1 = jax.jit(step1)(params, opt, batch, key)
+    p4, _, m4 = jax.jit(step4)(params, opt, batch, key)
+    # losses agree to fp tolerance (different key folding changes QAT noise
+    # only when cim mode is on; here it's off)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-3
+    l1 = jax.tree.leaves(p1)[0]
+    l4 = jax.tree.leaves(p4)[0]
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l4), atol=5e-3)
+
+
+def test_compression_unbiased():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (256, 64)) * 0.01
+    reps = [compression.simulate_compression(g, jax.random.fold_in(key, i))
+            for i in range(32)]
+    mean = np.mean([np.asarray(r) for r in reps], axis=0)
+    # stochastic rounding -> unbiased estimate
+    err = np.abs(mean - np.asarray(g)).max()
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert err < scale  # well under one quantization step after averaging
+
+
+def test_training_with_compression_converges(tmp_path):
+    cfg = tiny_cfg()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    opt_cfg = opt_mod.OptConfig(lr=2e-3, warmup_steps=2, total_steps=25)
+    tcfg = TrainerConfig(total_steps=25, checkpoint_every=1000,
+                         checkpoint_dir=str(tmp_path))
+    tr = Trainer(cfg, opt_cfg, tcfg, lambda s: lm_batch(dcfg, s),
+                 compress_grads=True)
+    out = tr.run(jax.random.PRNGKey(0), resume=False)
+    assert float(out["metrics"]["loss"]) < 5.2
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    """Fault tolerance: kill at step 10, resume, end-state == uninterrupted."""
+    cfg = tiny_cfg()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    opt_cfg = opt_mod.OptConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+
+    def run(dirname, total, resume):
+        tcfg = TrainerConfig(total_steps=total, checkpoint_every=10,
+                             checkpoint_dir=str(tmp_path / dirname))
+        tr = Trainer(cfg, opt_cfg, tcfg, lambda s: lm_batch(dcfg, s))
+        return tr.run(jax.random.PRNGKey(0), resume=resume)
+
+    full = run("a", 20, resume=False)
+    run("b", 10, resume=False)          # "crashes" after 10 steps (ckpt at 10)
+    resumed = run("b", 20, resume=True)  # resumes from step 10
+    la = np.asarray(jax.tree.leaves(full["params"])[0])
+    lb = np.asarray(jax.tree.leaves(resumed["params"])[0])
+    np.testing.assert_allclose(la, lb, atol=1e-5)
+
+
+def test_checkpoint_keep_k(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.ones((4,))}
+    for s in [1, 2, 3, 4]:
+        ckpt.save(s, state)
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_checkpoint_reshard_restore(tmp_path):
+    """Elastic restore: host arrays -> device_put with target shardings."""
+    ckpt = CheckpointManager(str(tmp_path))
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(5, state)
+    restored, meta = ckpt.restore(5, state, shardings=jax.tree.map(
+        lambda t: jax.sharding.SingleDeviceSharding(jax.devices()[0]), state))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+    assert meta["step"] == 5
+
+
+def test_schedule_shape():
+    cfg = opt_mod.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(opt_mod.schedule(cfg, jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]          # warmup
+    assert lrs[2] >= lrs[3] >= lrs[4]        # cosine decay
+    assert lrs[4] >= cfg.lr * cfg.min_lr_frac - 1e-6
+
+
+def test_straggler_watchdog(tmp_path):
+    """Slow steps get logged by the step-deadline watchdog."""
+    cfg = tiny_cfg()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    opt_cfg = opt_mod.OptConfig(lr=1e-3, warmup_steps=1, total_steps=3)
+    tcfg = TrainerConfig(total_steps=3, checkpoint_every=1000,
+                         checkpoint_dir=str(tmp_path),
+                         step_deadline_s=1e-9)  # everything is a straggler
+    tr = Trainer(cfg, opt_cfg, tcfg, lambda s: lm_batch(dcfg, s))
+    out = tr.run(jax.random.PRNGKey(0), resume=False)
+    assert len(out["slow_steps"]) == 3
+    assert all(dt > 0 for _, dt in out["slow_steps"])
