@@ -11,6 +11,7 @@ from repro.core.cim import (
     cim_matmul_behavioral,
     cim_matmul_bit_exact,
     output_noise_std_int,
+    output_noise_std_int_per_tile,
 )
 from repro.core.energy import EnergyModel, calibrated_model, sac_efficiency, snr_fom
 from repro.core.sac import Policy, ROLE_CLASS, get_policy, paper_sac, uniform_baseline
@@ -29,6 +30,7 @@ __all__ = [
     "get_policy",
     "inl_curve",
     "output_noise_std_int",
+    "output_noise_std_int_per_tile",
     "paper_sac",
     "sac_efficiency",
     "sar_convert",

@@ -26,12 +26,18 @@ Modelled non-idealities:
     -> 25 total decisions vs 10, i.e. 2.5x conversion time, 1.9x power,
     ~2x lower read noise).
 
-All functions are pure and vectorise over arbitrary input shapes.
+All functions are pure and vectorise over arbitrary input shapes. The SAR
+loop samples each (possibly majority-voted) decision directly from its exact
+closed-form probability — see ``decision_prob``/``majority_prob`` — instead
+of materialising ``mv_votes`` comparator samples, which makes a batched
+conversion one fused elementwise pass per SAR step and drops peak memory by
+~``mv_votes`` in CB mode (DESIGN.md §4).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
@@ -111,52 +117,143 @@ def inl_curve(spec: ADCSpec) -> np.ndarray:
     return out
 
 
+# --- analytic decision statistics -----------------------------------------
+#
+# A comparator decision is sign(v - level + noise) with noise drawn fresh per
+# vote from the Gaussian + Bernoulli(p_glitch) * U(-G, G) mixture. For the
+# batched one-pass engine we never materialise the votes: a single decision
+# is Bernoulli(p_up(d)) in the decision gap d = v - trial, and a CB
+# majority-of-n decision is Bernoulli of the binomial strict-majority tail of
+# p_up — the votes are iid given d, so this is *distribution-exact* w.r.t.
+# the materialised-vote model (kept as ``ref.sar_convert_votes_ref`` and
+# cross-checked statistically in tests/test_adc.py). Phi/phi are built from
+# lax.erf/exp directly: jax.scipy's ndtr lowers to an erfc path that XLA:CPU
+# refuses to fuse into the SAR feedback loop (~15x slower).
+
+_INV_SQRT2 = 0.7071067811865476
+_INV_SQRT2PI = 0.3989422804014327
+
+
+def _phi(x):
+    return 0.5 * (1.0 + jax.lax.erf(x * _INV_SQRT2))
+
+
+def _npdf(x):
+    return _INV_SQRT2PI * jnp.exp(-0.5 * x * x)
+
+
+def _norm_int(x):
+    """Antiderivative of the normal CDF: I(x) = x Phi(x) + phi(x)."""
+    return x * _phi(x) + _npdf(x)
+
+
+def decision_prob(d, sigma: float, p_glitch: float, glitch_mag: float):
+    """P(one comparator vote fires 'up') at decision gap ``d`` (LSB).
+
+    P(d + g + B*u > 0) with g ~ N(0, sigma^2), B ~ Bern(p_glitch),
+    u ~ U(-G, G); the glitch term integrates in closed form via
+    E_u[Phi((d+u)/sigma)] = (sigma/2G) * (I((d+G)/sigma) - I((d-G)/sigma)).
+    ``sigma``/``p_glitch`` are trace-time constants, so the degenerate cases
+    branch in Python and stay exact.
+    """
+    # glitch_mag == 0 collapses the kick to a point mass at 0: the mixture
+    # degenerates to the pure-Gaussian case (matches U(-0, 0) == 0 in the
+    # materialised model)
+    if p_glitch <= 0.0 or glitch_mag <= 0.0:
+        p_glitch = 0.0
+    if sigma > 0.0:
+        base = _phi(d * (1.0 / sigma))
+        if p_glitch > 0.0:
+            a = (d - glitch_mag) * (1.0 / sigma)
+            b = (d + glitch_mag) * (1.0 / sigma)
+            gl = (sigma / (2.0 * glitch_mag)) * (_norm_int(b) - _norm_int(a))
+            return (1.0 - p_glitch) * base + p_glitch * gl
+        return base
+    base = (d > 0.0).astype(jnp.float32)
+    if p_glitch > 0.0:
+        gl = jnp.clip((d + glitch_mag) * (1.0 / (2.0 * glitch_mag)), 0.0, 1.0)
+        return (1.0 - p_glitch) * base + p_glitch * gl
+    return base
+
+
+def majority_prob(p, votes: int):
+    """P(strict majority of ``votes`` iid Bernoulli(p) votes fire 'up').
+
+    Matches the materialised rule ``ups * 2 > votes`` (ties lose), i.e. the
+    binomial tail at votes//2 + 1.
+    """
+    if votes == 1:
+        return p
+    thr = votes // 2 + 1
+    q = 1.0 - p
+    out = jnp.zeros_like(p)
+    for i in range(thr, votes + 1):
+        out = out + float(math.comb(votes, i)) * (p ** i) * (q ** (votes - i))
+    return out
+
+
+def _dnl_shift(v: jnp.ndarray, spec: ADCSpec) -> jnp.ndarray:
+    """Static per-code threshold scatter: deterministic function of the local
+    code, same realisation for every conversion of this column."""
+    if spec.sigma_dnl <= 0.0:
+        return v
+    table = spec.sigma_dnl * jax.random.normal(
+        jax.random.PRNGKey(spec.mismatch_seed + 1), (spec.codes,)
+    )
+    idx = jnp.clip(jnp.floor(v).astype(jnp.int32), 0, spec.codes - 1)
+    return v + table[idx]
+
+
 @partial(jax.jit, static_argnames=("spec", "cb"))
 def sar_convert(v: jnp.ndarray, key: jax.Array, spec: ADCSpec, cb: bool) -> jnp.ndarray:
     """Convert analog values ``v`` (ideal-LSB units, [0, 2^bits)) to codes.
 
-    Implements top-plate SAR: at step for bit ``b`` the DAC trial level is
-    compared against the held signal; the comparator adds Gaussian noise per
-    decision. With ``cb`` the last ``mv_bits`` decisions take the majority of
-    ``mv_votes`` noisy comparisons.
+    Implements top-plate SAR: at the step for bit ``b`` the DAC trial level
+    is compared against the held signal. Each decision consumes exactly one
+    counter-PRNG uniform (key words x element index x step — see DESIGN.md
+    §4) and fires with the analytic vote-summed probability from
+    ``decision_prob``/``majority_prob`` above, so a whole batch of
+    conversions is one pass of fused elementwise work per SAR step instead
+    of ``votes`` materialised comparator samples. The step loop is unrolled
+    at trace time: every per-step op is branch-free elementwise, so XLA
+    fuses the whole conversion into a handful of passes over the batch (a
+    rolled ``fori_loop`` carrying (code, level) materialises every
+    intermediate each step — measured ~5x slower on CPU). The materialised-
+    vote model survives as ``ref.sar_convert_votes_ref``; tests check both
+    per-decision probabilities (MC vote frequencies vs ``decision_prob``/
+    ``majority_prob``) and end-to-end code statistics against it.
     """
+    from repro.core.prng import (
+        DOMAIN_SAR, key_words, threefry2x32, uniform_from_bits,
+    )
+
     w = dac_bit_weights(spec)
     vshape = v.shape
-    v = v.reshape(-1)
+    v = _dnl_shift(v.reshape(-1), spec)
+    k0, k1 = key_words(key)
+    k0 = k0 ^ jnp.uint32(DOMAIN_SAR)  # separate stream from tile_gaussian
+    idx = jax.lax.iota(jnp.uint32, v.shape[0])
 
-    if spec.sigma_dnl > 0.0:
-        # static per-code threshold scatter: deterministic function of the
-        # local code, same realisation for every conversion of this column.
-        table = spec.sigma_dnl * jax.random.normal(
-            jax.random.PRNGKey(spec.mismatch_seed + 1), (spec.codes,)
-        )
-        idx = jnp.clip(jnp.floor(v).astype(jnp.int32), 0, spec.codes - 1)
-        v = v + table[idx]
-
-    def decide(level, subkey, votes, sigma, fine):
-        # comparator: sign(v - level + noise); majority over `votes` samples.
-        # Fine-phase decisions add the heavy-tailed metastability component.
-        k1, k2, k3 = jax.random.split(subkey, 3)
-        noise = sigma * jax.random.normal(k1, (votes,) + v.shape)
-        if fine:
-            glitch = jax.random.uniform(k2, (votes,) + v.shape) < spec.p_glitch
-            kick = jax.random.uniform(
-                k3, (votes,) + v.shape, minval=-spec.glitch_mag, maxval=spec.glitch_mag
-            )
-            noise = noise + glitch * kick
-        ups = jnp.sum((v[None] - level[None] + noise) > 0.0, axis=0)
-        return ups * 2 > votes  # strict majority (>=4 of 6, >0 of 1)
-
+    n_coarse = spec.adc_bits - spec.mv_bits
     code = jnp.zeros_like(v, dtype=jnp.int32)
     level = jnp.zeros_like(v)
-    for step, b in enumerate(range(spec.adc_bits - 1, -1, -1)):
-        fine = b < spec.mv_bits
-        votes = spec.mv_votes if (cb and fine) else 1
+    for step in range(spec.adc_bits):
+        # coarse (high-bias) phase: single quiet vote — an MSB error is
+        # unrecoverable; relaxed fine phase: glitchy, majority-voted under CB.
+        fine = step >= n_coarse
         sigma = spec.sigma_cmp if fine else spec.coarse_frac * spec.sigma_cmp
-        trial_level = level + w[b]
-        bit = decide(trial_level, jax.random.fold_in(key, step), votes, sigma, fine)
+        p_glitch = spec.p_glitch if fine else 0.0
+        votes = (spec.mv_votes if cb else 1) if fine else 1
+        b = spec.adc_bits - 1 - step
+        trial = level + w[b]
+        bits, _ = threefry2x32(k0, k1, idx, jnp.uint32(step))
+        u = uniform_from_bits(bits)
+        p = majority_prob(
+            decision_prob(v - trial, sigma, p_glitch, spec.glitch_mag), votes
+        )
+        bit = u < p
         code = code + bit.astype(jnp.int32) * (1 << b)
-        level = jnp.where(bit, trial_level, level)
+        level = jnp.where(bit, trial, level)
     return code.reshape(vshape)
 
 

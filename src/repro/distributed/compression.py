@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import pvary, shard_map
+
 
 def _stochastic_round(x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
     floor = jnp.floor(x)
@@ -69,7 +71,7 @@ def compressed_dp_grads(
         # pvary: mark params as device-varying so jax.grad does NOT insert
         # its automatic psum for replicated inputs (shard_map check_vma
         # semantics) — the int8 psum below must be the only reduction.
-        params = jax.tree.map(lambda t: jax.lax.pvary(t, (dp_axis,)), params)
+        params = jax.tree.map(lambda t: pvary(t, (dp_axis,)), params)
         g = grad_fn(params, local_batch)
         idx = jax.lax.axis_index(dp_axis)
 
@@ -89,7 +91,7 @@ def compressed_dp_grads(
 
     batch_specs = jax.tree.map(lambda x: P(dp_axis), batch)
     param_specs = jax.tree.map(lambda x: P(), params)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(param_specs, batch_specs),
         out_specs=param_specs,

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import pvary as _pvary, shard_map as _shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
@@ -82,8 +84,8 @@ def pipeline_apply(
 
         # pvary: the carries become device-varying after the first ppermute;
         # mark the initial values accordingly (shard_map vma semantics).
-        buf0 = jax.lax.pvary(jnp.zeros((mb,) + x_l.shape[1:], x_l.dtype), (axis,))
-        outs0 = jax.lax.pvary(jnp.zeros_like(micros), (axis,))
+        buf0 = _pvary(jnp.zeros((mb,) + x_l.shape[1:], x_l.dtype), (axis,))
+        outs0 = _pvary(jnp.zeros_like(micros), (axis,))
         (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(n_ticks))
         # only the last stage holds real outputs; zero elsewhere -> psum
         outs = jnp.where(stage == n_stage - 1, outs, jnp.zeros_like(outs))
@@ -91,7 +93,7 @@ def pipeline_apply(
         return outs.reshape((b,) + x_l.shape[1:])
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(spec_params, P()),
         out_specs=P(),

@@ -24,6 +24,14 @@ from typing import Dict, Optional, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax >= 0.6 promotes shard_map/pvary to the top level; jax 0.4.x keeps
+# shard_map experimental and has no vma tracking (pvary == identity there).
+# Import these from here instead of `jax.` directly.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 AxisVal = Union[None, str, Tuple[str, ...]]
 
 

@@ -1,0 +1,9 @@
+"""Version shims for the Pallas TPU API (kept out of the package __init__ so
+pure-jnp oracle imports never pull in pallas.tpu)."""
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+CompilerParams = (
+    getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams
+)

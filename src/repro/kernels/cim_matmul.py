@@ -1,24 +1,40 @@
-"""Pallas TPU kernel for the CR-CIM behavioural matmul.
+"""Pallas TPU kernel for the CR-CIM behavioural matmul, with in-kernel PRNG.
 
 The macro quantizes *partial sums* at ``macro_rows`` (=1024) granularity: each
 K-tile's analog sum is read through the 10-bit SAR ADC before digital
 accumulation. The kernel fuses, per (bm x bn x bk) block:
 
     int8 x int8 -> int32 MXU dot  (+)  per-K-tile readout error injection
+                                  (+)  dequant scale epilogue
 
-into a single VMEM-resident accumulation, so the CIM "serving" mode costs one
-extra FMA per element over a plain quantized matmul instead of a separate
-elementwise pass over the (T, M, N) partial-sum tensor in HBM.
+into a single VMEM-resident accumulation. The readout noise is *generated
+inside the kernel* from a scalar-prefetched seed and the grid position —
+there is no ``(T, M, N)`` noise operand any more, which removes the dominant
+HBM stream of the old design (for a 4096^3 int8 matmul: 256 MiB of noise vs
+32 MiB of operands).
+
+Two noise constructions (``prng_impl``):
+
+  * ``"threefry"`` (default off-TPU / interpret): counter-based Threefry-2x32
+    keyed on (seed, k-tile) with the *global* (row, col) as counter, bits ->
+    Box-Muller Gaussian (``repro.core.prng``). Bit-reproducible against the
+    pure-jnp oracle ``ref.cim_matmul_prng_ref`` and invariant to bm/bn.
+  * ``"hw"`` (default on compiled TPU): the TPU on-core PRNG
+    (``pltpu.prng_seed`` seeded with (seed, i, j, k) / ``prng_random_bits``),
+    same bits -> Gaussian pipeline. Cheapest on hardware, deterministic given
+    (seed, grid), but the stream differs from the oracle and depends on the
+    block shape. jax 0.4.x has no CPU lowering for these primitives, so this
+    path never runs in interpret mode.
+
+The dequant epilogue multiplies the f32 accumulator by a scalar ``scale``
+(= x_scale * w_scale) held in SMEM, so ``ops.cim_matmul`` no longer runs a
+separate elementwise f32 pass over the (M, N) output.
 
 TPU mapping (DESIGN.md §2): bk == macro_rows == 1024 keeps one macro tile per
-grid step and is MXU-aligned (8x128 lanes, 128x128 systolic); bm/bn default to
-256 which keeps the working set (x 256KiB + w 256KiB + noise 256KiB + acc
-256KiB) comfortably inside VMEM. Noise is a kernel *operand* (generated with
-the standard JAX PRNG outside) so the kernel is bit-reproducible and testable
-against the pure-jnp oracle in ``ref.py``.
-
-Grid iteration order is (m, n, k) with k innermost ("arbitrary" semantics) so
-the f32 accumulator lives in a VMEM scratch across the K sweep.
+grid step and is MXU-aligned; bm/bn default to 256 which keeps the working
+set (x 256KiB + w 256KiB + acc 256KiB) comfortably inside VMEM. Grid
+iteration order is (m, n, k) with k innermost ("arbitrary" semantics) so the
+f32 accumulator lives in a VMEM scratch across the K sweep.
 """
 
 from __future__ import annotations
@@ -30,52 +46,83 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.prng import tile_gaussian
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 MACRO_ROWS = 1024
 
 
-def _kernel(x_ref, w_ref, n_ref, o_ref, acc_ref, *, sigma: float, n_k: int):
-    k = pl.program_id(2)
+def _hw_tile_gaussian(seed_ref, i, j, kk, bm, bn):
+    """(bm, bn) standard normals from the TPU on-core PRNG."""
+    from repro.core.prng import gaussian_from_bits
 
-    @pl.when(k == 0)
+    pltpu.prng_seed(seed_ref[0], seed_ref[1], i, j, kk)
+    bits = pltpu.bitcast(pltpu.prng_random_bits((2 * bm, bn)), jnp.uint32)
+    return gaussian_from_bits(bits[:bm], bits[bm:])
+
+
+def _kernel(seed_ref, x_ref, w_ref, scale_ref, o_ref, acc_ref, *,
+            sigma: float, n_k: int, bm: int, bn: int, prng_impl: str):
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # MXU int8 dot with int32 accumulate; the partial sum of one macro tile
     # is exactly representable in f32 (< 2^24), so the f32 accumulator is
     # exact for the deterministic part.
-    s = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.int32)
-    acc = acc_ref[...] + s.astype(jnp.float32)
+    s = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+    ).astype(jnp.float32)
     if sigma > 0.0:
-        acc = acc + sigma * n_ref[0]
-    acc_ref[...] = acc
+        if prng_impl == "hw":
+            z = _hw_tile_gaussian(seed_ref, i, j, kk, bm, bn)
+        else:
+            s0 = seed_ref[0].astype(jnp.uint32)
+            s1 = seed_ref[1].astype(jnp.uint32)
+            row0 = (i * bm).astype(jnp.uint32)
+            col0 = (j * bn).astype(jnp.uint32)
+            r_ids = row0 + jax.lax.broadcasted_iota(jnp.uint32, (bm, bn), 0)
+            c_ids = col0 + jax.lax.broadcasted_iota(jnp.uint32, (bm, bn), 1)
+            z = tile_gaussian(s0, s1, kk.astype(jnp.uint32), r_ids, c_ids)
+        s = s + sigma * z
+    acc_ref[...] = acc_ref[...] + s
 
-    @pl.when(k == n_k - 1)
+    @pl.when(kk == n_k - 1)
     def _done():
-        o_ref[...] = acc_ref[...]
+        o_ref[...] = acc_ref[...] * scale_ref[0]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sigma", "bm", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("sigma", "bm", "bn", "bk", "interpret", "prng_impl"),
 )
 def cim_matmul_pallas(
     xq: jnp.ndarray,
     wq: jnp.ndarray,
-    noise: jnp.ndarray | None,
+    seed: jnp.ndarray | int | None,
     sigma: float = 0.0,
+    scale: jnp.ndarray | float | None = None,
     bm: int = 256,
     bn: int = 256,
     bk: int = MACRO_ROWS,
     interpret: bool = False,
+    prng_impl: str = "auto",
 ) -> jnp.ndarray:
-    """CIM behavioural matmul. See module docstring.
+    """CIM behavioural matmul with in-kernel noise. See module docstring.
 
     Args:
       xq:    (M, K) int8. M, K need not be tile-aligned (padded here).
       wq:    (K, N) int8.
-      noise: (T, M, N) float32 with T = ceil(K/bk), or None (sigma==0 path).
+      seed:  int32 seed for the per-tile noise — a scalar or a (2,) vector
+             (both words of a JAX PRNG key, see ``prng.seed_from_key``; a
+             scalar is zero-extended) — or None (sigma==0 path).
       sigma: per-K-tile output-referred error std (integer product units).
+      scale: scalar dequant factor fused into the epilogue (None -> 1.0).
+      prng_impl: "auto" | "threefry" | "hw" (see module docstring).
 
-    Returns: (M, N) float32.
+    Returns: (M, N) float32 of (sum_k tiles + noise) * scale.
     """
     m, k = xq.shape
     k2, n = wq.shape
@@ -83,29 +130,49 @@ def cim_matmul_pallas(
     n_k = -(-k // bk)
     mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, n_k * bk
 
+    if prng_impl == "auto":
+        prng_impl = (
+            "hw" if (jax.default_backend() == "tpu" and not interpret)
+            else "threefry"
+        )
+
     xq = jnp.pad(xq, ((0, mp - m), (0, kp - k)))
     wq = jnp.pad(wq, ((0, kp - k), (0, np_ - n)))
-    if noise is None:
-        noise = jnp.zeros((n_k, mp, np_), jnp.float32)
+    if seed is None:
+        seed = jnp.zeros((2,), jnp.int32)
         sigma = 0.0
     else:
-        noise = jnp.pad(noise, ((0, 0), (0, mp - m), (0, np_ - n)))
+        seed = jnp.asarray(seed, jnp.int32).reshape(-1)
+        assert seed.shape[0] in (1, 2), seed.shape
+        if seed.shape[0] == 1:
+            seed = jnp.concatenate([seed, jnp.zeros((1,), jnp.int32)])
+    scale = (
+        jnp.ones((1,), jnp.float32)
+        if scale is None
+        else jnp.asarray(scale, jnp.float32).reshape(1)
+    )
 
-    grid = (mp // bm, np_ // bn, n_k)
-    out = pl.pallas_call(
-        functools.partial(_kernel, sigma=float(sigma), n_k=n_k),
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(mp // bm, np_ // bn, n_k),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, bm, bn), lambda i, j, kk: (kk, i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk, sr: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk, sr: (kk, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, sr: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, sigma=float(sigma), n_k=n_k, bm=bm, bn=bn,
+            prng_impl=prng_impl,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(xq, wq, noise)
+    )(seed, xq, wq, scale)
     return out[:m, :n]

@@ -4,6 +4,17 @@
 straight-through custom VJP so the same op is usable in QAT training. On CPU
 (this container) the kernel runs in interpret mode or falls back to the
 oracle; on TPU the Pallas path compiles natively.
+
+The kernel carries no noise operand: readout error is generated in-kernel
+from a single int32 seed (derived from the caller's PRNG key), and the
+dequant scale ``x_scale * w_scale`` is fused into the kernel epilogue — the
+old separate f32 pass over the (M, N) output is gone.
+
+Per-tile sigma uses ``output_noise_std_int_per_tile(spec, K)``, i.e. the
+analog gain is fitted to the true K exactly as in the bit-exact path. (The
+old code applied the full-tile sigma ``output_noise_std_int(spec,
+macro_rows)`` to every tile, overstating the noise whenever K <
+macro_rows — see the regression test in tests/test_kernels.py.)
 """
 
 from __future__ import annotations
@@ -15,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.core.cim import CIMSpec, output_noise_std_int
+from repro.core.cim import CIMSpec, output_noise_std_int_per_tile
+from repro.core.prng import seed_from_key
 from repro.kernels import ref
 from repro.kernels.cim_matmul import MACRO_ROWS, cim_matmul_pallas
 
@@ -31,33 +43,33 @@ def _use_pallas() -> bool:
 def cim_matmul_int(
     xq: jnp.ndarray,
     wq: jnp.ndarray,
-    noise: Optional[jnp.ndarray],
+    seed: Optional[jnp.ndarray],
     sigma: float,
     macro_rows: int = MACRO_ROWS,
+    scale: Optional[jnp.ndarray] = None,
     force: Optional[str] = None,
 ) -> jnp.ndarray:
     """Integer-domain CIM matmul; dispatches kernel vs oracle.
 
+    seed: int32 scalar for the in-kernel PRNG, or None (noiseless path).
+    scale: scalar dequant factor applied in the epilogue (None -> 1.0).
     force: None (auto), "pallas", "pallas_interpret", "ref".
     """
     mode = force or ("pallas" if _use_pallas() else "ref")
-    if mode == "pallas":
+    if mode in ("pallas", "pallas_interpret"):
         return cim_matmul_pallas(
-            xq.astype(jnp.int8), wq.astype(jnp.int8), noise, sigma, bk=macro_rows
+            xq.astype(jnp.int8), wq.astype(jnp.int8), seed, sigma,
+            scale=scale, bk=macro_rows,
+            interpret=(mode == "pallas_interpret"),
         )
-    if mode == "pallas_interpret":
-        return cim_matmul_pallas(
-            xq.astype(jnp.int8), wq.astype(jnp.int8), noise, sigma,
-            bk=macro_rows, interpret=True,
-        )
-    return ref.cim_matmul_ref(xq, wq, noise, sigma, macro_rows)
+    return ref.cim_matmul_prng_ref(xq, wq, seed, sigma, macro_rows, scale)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def cim_matmul(x, w, spec: CIMSpec, key: Optional[jax.Array]):
     """y ~ macro(x @ w): fused quantize -> tiled int matmul + per-tile ADC
-    error -> dequantize. Differentiable via STE (gradients flow as if the op
-    were the dequantized exact matmul)."""
+    error + dequant epilogue. Differentiable via STE (gradients flow as if
+    the op were the dequantized exact matmul)."""
     y, _ = _cim_matmul_fwd(x, w, spec, key)
     return y
 
@@ -70,15 +82,15 @@ def _cim_matmul_fwd(x, w, spec: CIMSpec, key):
     ws = quant.abs_max_scale(w, spec.w_bits)
     xq = quant.quantize(x2, xs, spec.in_bits)
     wq = quant.quantize(w, ws, spec.w_bits)
-    m, k = xq.shape
+    k = xq.shape[1]
     n = wq.shape[1]
-    t = -(-k // spec.macro_rows)
-    sigma = output_noise_std_int(spec, spec.macro_rows)  # per single tile
-    noise = None
+    # per-tile sigma with the analog gain fitted to the true K (matches the
+    # bit-exact path's per-layer Vref trim, incl. ragged last tiles)
+    sigma = output_noise_std_int_per_tile(spec, k)
+    seed = None
     if key is not None and sigma > 0:
-        noise = jax.random.normal(key, (t, m, n), jnp.float32)
-    y = cim_matmul_int(xq, wq, noise, sigma, spec.macro_rows)
-    y = y * xs * ws
+        seed = seed_from_key(key)
+    y = cim_matmul_int(xq, wq, seed, sigma, spec.macro_rows, scale=xs * ws)
     fq_x = quant.dequantize(xq, xs)
     fq_w = quant.dequantize(wq, ws)
     return y.reshape(orig_shape[:-1] + (n,)), (fq_x, fq_w, orig_shape)

@@ -1,8 +1,46 @@
-"""Pure-jnp oracles for the Pallas kernels (tests assert allclose vs these)."""
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose vs these),
+plus the pre-batching reference implementations of the SAR engine.
+
+Three families live here:
+
+  * ``cim_matmul_*_ref`` — same-construction oracles for the Pallas
+    behavioural kernel. ``cim_matmul_prng_ref`` reproduces the kernel's
+    in-kernel Threefry noise bit-for-bit (same (seed, tile, row, col)
+    counter contract, see ``repro.core.prng``); it is also the CPU fallback
+    path of ``ops.cim_matmul``.
+  * ``sar_convert_votes_ref`` / ``cim_matmul_bit_exact_loop`` — the original
+    materialised-vote SAR model and per-(tile, plane) conversion loop. They
+    define the distribution the fast analytic engine must match
+    (tests/test_adc.py checks both the end-to-end code statistics and the
+    per-decision probabilities against ``adc.decision_prob``/
+    ``majority_prob``) and serve as the baseline in
+    benchmarks/kernel_bench.py.
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+from repro.core.adc import ADCSpec, dac_bit_weights
+from repro.core.prng import tile_gaussian
+
+
+def _dnl_shift_frozen(v: jnp.ndarray, spec: ADCSpec) -> jnp.ndarray:
+    """Pre-PR static per-code threshold scatter, inlined so the frozen
+    baselines below cannot drift if adc.py's live copy ever changes."""
+    if spec.sigma_dnl <= 0.0:
+        return v
+    table = spec.sigma_dnl * jax.random.normal(
+        jax.random.PRNGKey(spec.mismatch_seed + 1), (spec.codes,)
+    )
+    idx = jnp.clip(jnp.floor(v).astype(jnp.int32), 0, spec.codes - 1)
+    return v + table[idx]
+
+
+# ---------------------------------------------------------------------------
+# behavioural matmul oracles
+# ---------------------------------------------------------------------------
 
 
 def cim_matmul_ref(
@@ -12,7 +50,7 @@ def cim_matmul_ref(
     sigma: float,
     macro_rows: int = 1024,
 ) -> jnp.ndarray:
-    """K-tiled CIM matmul with per-tile additive readout error.
+    """K-tiled CIM matmul with explicit per-tile additive readout error.
 
     Args:
       xq:    (M, K) int8/int32 quantized activations.
@@ -20,7 +58,7 @@ def cim_matmul_ref(
       noise: (T, M, N) float32 unit-variance readout noise per K-tile
              (T = ceil(K / macro_rows)), or None for the noiseless path.
       sigma: output-referred error std per K-tile, integer product units
-             (from ``repro.core.cim.output_noise_std_int`` for one tile).
+             (from ``repro.core.cim.output_noise_std_int_per_tile``).
 
     Returns:
       (M, N) float32 macro estimate of xq @ wq.
@@ -42,10 +80,146 @@ def cim_matmul_ref(
     return y
 
 
+def cim_matmul_prng_ref(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    seed: jnp.ndarray | int | None,
+    sigma: float,
+    macro_rows: int = 1024,
+    scale: jnp.ndarray | float | None = None,
+) -> jnp.ndarray:
+    """Same-construction oracle for the in-kernel-PRNG Pallas matmul.
+
+    Mirrors ``cim_matmul_pallas`` operation for operation: per K-tile, the
+    exact int32 dot plus ``sigma`` times the Threefry/Box-Muller noise keyed
+    on (seed, tile) and countered by the *global* (row, col); f32 tile
+    accumulation in the same order; scalar ``scale`` epilogue. Because the
+    noise contract never references block sizes, this oracle needs no
+    knowledge of bm/bn — agreement with any blocking is part of the test.
+    """
+    m, k = xq.shape
+    _, n = wq.shape
+    t = -(-k // macro_rows)
+    kp = t * macro_rows
+    xp = jnp.pad(xq.astype(jnp.int32), ((0, 0), (0, kp - k)))
+    wp = jnp.pad(wq.astype(jnp.int32), ((0, kp - k), (0, 0)))
+
+    use_noise = seed is not None and sigma > 0.0
+    if use_noise:
+        sv = jnp.asarray(seed, jnp.int32).reshape(-1).astype(jnp.uint32)
+        s0 = sv[0]
+        s1 = sv[1] if sv.shape[0] > 1 else jnp.uint32(0)
+        zeros = jnp.zeros((m, n), jnp.uint32)
+        r_ids = jnp.arange(m, dtype=jnp.uint32)[:, None] + zeros
+        c_ids = jnp.arange(n, dtype=jnp.uint32)[None, :] + zeros
+
+    y = jnp.zeros((m, n), jnp.float32)
+    for ti in range(t):
+        xs = xp[:, ti * macro_rows : (ti + 1) * macro_rows]
+        ws = wp[ti * macro_rows : (ti + 1) * macro_rows, :]
+        s = jnp.dot(xs, ws, preferred_element_type=jnp.int32).astype(jnp.float32)
+        if use_noise:
+            s = s + sigma * tile_gaussian(s0, s1, jnp.uint32(ti), r_ids, c_ids)
+        y = y + s
+    if scale is not None:
+        y = y * jnp.asarray(scale, jnp.float32).reshape(-1)[0]
+    return y
+
+
 def quantize_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Symmetric quantization oracle (matches kernels.ops fused quant)."""
     q = 2 ** (bits - 1) - 1
     return jnp.clip(jnp.round(x / scale), -q, q).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# SAR references
+# ---------------------------------------------------------------------------
+
+
+def sar_convert_votes_ref(
+    v: jnp.ndarray, key: jax.Array, spec: ADCSpec, cb: bool
+) -> jnp.ndarray:
+    """Original materialised-vote SAR model (pre-PR implementation, verbatim).
+
+    Draws every comparator vote explicitly — ``(votes,) + v.shape`` Gaussian
+    + glitch samples per fine decision — and majority-votes the signs. The
+    analytic engine must match this distribution (not stream); kept as the
+    ground-truth model and as the benchmark baseline.
+    """
+    w = dac_bit_weights(spec)
+    vshape = v.shape
+    v = _dnl_shift_frozen(v.reshape(-1), spec)
+
+    def decide(level, subkey, votes, sigma, fine):
+        k1, k2, k3 = jax.random.split(subkey, 3)
+        noise = sigma * jax.random.normal(k1, (votes,) + v.shape)
+        if fine:
+            glitch = jax.random.uniform(k2, (votes,) + v.shape) < spec.p_glitch
+            kick = jax.random.uniform(
+                k3, (votes,) + v.shape,
+                minval=-spec.glitch_mag, maxval=spec.glitch_mag,
+            )
+            noise = noise + glitch * kick
+        ups = jnp.sum((v[None] - level[None] + noise) > 0.0, axis=0)
+        return ups * 2 > votes  # strict majority (>=4 of 6, >0 of 1)
+
+    code = jnp.zeros_like(v, dtype=jnp.int32)
+    level = jnp.zeros_like(v)
+    for step, b in enumerate(range(spec.adc_bits - 1, -1, -1)):
+        fine = b < spec.mv_bits
+        votes = spec.mv_votes if (cb and fine) else 1
+        sigma = spec.sigma_cmp if fine else spec.coarse_frac * spec.sigma_cmp
+        trial_level = level + w[b]
+        bit = decide(trial_level, jax.random.fold_in(key, step), votes, sigma, fine)
+        code = code + bit.astype(jnp.int32) * (1 << b)
+        level = jnp.where(bit, trial_level, level)
+    return code.reshape(vshape)
+
+
+def cim_matmul_bit_exact_loop(
+    xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec
+) -> jnp.ndarray:
+    """Original per-(K-tile, plane) conversion loop (pre-PR engine, verbatim).
+
+    ``T * w_bits`` sequential ``sar_convert_votes_ref`` conversions. Slow to
+    trace and to run — exists to validate the batched engine statistically
+    and to anchor the kernel_bench speedup numbers.
+    """
+    from repro.core import quant
+
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2
+    rows = spec.macro_rows
+    t = -(-k // rows)
+    kp = t * rows
+    xq = jnp.pad(xq, ((0, 0), (0, kp - k)))
+    wq = jnp.pad(wq, ((0, kp - k), (0, 0)))
+
+    qx = quant.qmax(spec.in_bits)
+    adc = spec.effective_adc()
+    half = 2.0 ** (spec.adc_bits - 1)
+    gain = spec.analog_gain(rows=k)
+    pw = quant.plane_weights(spec.w_bits)
+    wplanes = quant.unsigned_bitplanes(wq, spec.w_bits)
+
+    x_drive = xq.astype(jnp.float32) / qx
+
+    y = jnp.zeros((m, n), jnp.float32)
+    for ti in range(t):
+        xs = jax.lax.dynamic_slice_in_dim(x_drive, ti * rows, rows, axis=1)
+        for j in range(spec.w_bits):
+            ws = jax.lax.dynamic_slice_in_dim(wplanes[j], ti * rows, rows, axis=0)
+            s = xs @ ws.astype(jnp.float32)
+            v = gain * spec.attenuation * s + half
+            v = jnp.clip(v, 0.0, 2.0 ** spec.adc_bits - 1.0)
+            code = sar_convert_votes_ref(
+                v, jax.random.fold_in(key, ti * spec.w_bits + j), adc, spec.cb
+            )
+            s_hat = (code.astype(jnp.float32) - half) / (gain * spec.attenuation)
+            y = y + pw[j].astype(jnp.float32) * s_hat * qx
+    return y
 
 
 def flash_attention_ref(q, k, v, causal: bool = True):

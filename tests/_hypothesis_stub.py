@@ -1,0 +1,85 @@
+"""Minimal deterministic stand-in for `hypothesis` when it isn't installed.
+
+The container image this repo targets has no `hypothesis` wheel and no
+network, so tests/conftest.py installs this stub into ``sys.modules`` as a
+fallback. It covers exactly the API surface the test-suite uses:
+
+    @settings(deadline=None, max_examples=N)
+    @given(x=st.integers(a, b), y=st.sampled_from(seq), z=st.floats(a, b))
+    def test_foo(x, y, z): ...
+
+Each ``@given`` test runs ``max_examples`` times (default 10) with draws
+from a PRNG seeded by the test name — deterministic across runs, varied
+across tests. This is NOT shrinking, targeted search, or a database — just
+enough property coverage to keep the suite meaningful without the
+dependency. If the real hypothesis is importable, it is always preferred.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_for(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def settings(**kwargs):
+    """Capture max_examples; other knobs (deadline, ...) are no-ops here."""
+    def deco(fn):
+        fn._stub_settings = dict(kwargs)
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # @settings may be applied above or below @given
+        base_settings = getattr(fn, "_stub_settings", {})
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = {**base_settings, **getattr(wrapper, "_stub_settings", {})}
+            n = int(cfg.get("max_examples", 10))
+            seed = zlib.crc32(fn.__module__.encode() + b"::" + fn.__name__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = {k: s.example_for(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the strategy parameters from pytest's fixture resolution
+        # (functools.wraps exposes the original signature via __wrapped__)
+        del wrapper.__wrapped__
+        params = [
+            p for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategy_kwargs
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return deco

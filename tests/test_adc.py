@@ -86,6 +86,66 @@ def test_mv_votes_reduce_noise_monotonically():
     assert n2 < n1
 
 
+def test_decision_prob_matches_vote_frequencies():
+    """Independent validation of the closed-form comparator statistics: draw
+    the materialised noise mixture (Gaussian + Bernoulli glitch * uniform
+    kick) and compare empirical single-vote and majority-of-6 'up'
+    frequencies against decision_prob/majority_prob at a grid of gaps."""
+    from repro.core.adc import decision_prob, majority_prob
+
+    spec = ADCSpec()
+    sigma, pg, g = spec.sigma_cmp, spec.p_glitch, spec.glitch_mag
+    gaps = jnp.asarray([-30.0, -6.0, -1.5, -0.3, 0.0, 0.3, 1.5, 6.0, 30.0])
+    n, votes = 40000, spec.mv_votes
+    key = jax.random.PRNGKey(21)
+    k1, k2, k3 = jax.random.split(key, 3)
+    noise = sigma * jax.random.normal(k1, (n, votes, gaps.shape[0]))
+    glitch = jax.random.uniform(k2, noise.shape) < pg
+    kick = jax.random.uniform(k3, noise.shape, minval=-g, maxval=g)
+    up = (gaps[None, None, :] + noise + glitch * kick) > 0.0
+
+    p1_emp = np.asarray(jnp.mean(up[:, 0, :], axis=0))
+    p1 = np.asarray(decision_prob(gaps, sigma, pg, g))
+    se1 = np.sqrt(np.maximum(p1 * (1 - p1), 1e-9) / n)
+    np.testing.assert_array_less(np.abs(p1_emp - p1), 4.5 * se1 + 1e-4)
+
+    maj_emp = np.asarray(jnp.mean(jnp.sum(up, axis=1) * 2 > votes, axis=0))
+    pm = np.asarray(majority_prob(decision_prob(gaps, sigma, pg, g), votes))
+    sem = np.sqrt(np.maximum(pm * (1 - pm), 1e-9) / n)
+    np.testing.assert_array_less(np.abs(maj_emp - pm), 4.5 * sem + 1e-4)
+
+    # coarse phase: quiet comparator, no glitches
+    pc_emp = np.asarray(jnp.mean(
+        (gaps[None, :] + spec.coarse_frac * sigma
+         * jax.random.normal(k1, (n, gaps.shape[0]))) > 0.0, axis=0))
+    pc = np.asarray(decision_prob(gaps, spec.coarse_frac * sigma, 0.0, g))
+    sec = np.sqrt(np.maximum(pc * (1 - pc), 1e-9) / n)
+    np.testing.assert_array_less(np.abs(pc_emp - pc), 4.5 * sec + 1e-4)
+
+
+def test_sar_distribution_matches_materialised_votes():
+    """The vote-summed engine must be distribution-identical to the original
+    materialised-vote model (ref.sar_convert_votes_ref): per-level code mean
+    and noise std agree within Monte-Carlo error."""
+    from repro.kernels.ref import sar_convert_votes_ref
+
+    spec = ADCSpec()
+    reps, levels = 256, 64
+    v = jnp.tile(jnp.linspace(8.0, 1016.0, levels), (reps, 1))
+    for cb in (False, True):
+        old = sar_convert_votes_ref(v, jax.random.PRNGKey(3), spec, cb)
+        new = sar_convert(v, jax.random.PRNGKey(4), spec, cb)
+        old = np.asarray(old, np.float32)
+        new = np.asarray(new, np.float32)
+        # per-level mean: se ~ sqrt(2) * std / sqrt(reps) for the difference
+        # of two MC means; the max over `levels` columns needs ~4.5 se
+        tol_mean = 4.5 * np.sqrt(2.0) * old.std(axis=0).mean() / np.sqrt(reps)
+        assert np.max(np.abs(old.mean(0) - new.mean(0))) < tol_mean
+        # aggregate noise: within 10%
+        r = new.std(axis=0).mean() / old.std(axis=0).mean()
+        assert 0.9 < r < 1.1, r
+
+
 def test_dnl_is_static_not_noise():
     """sigma_dnl shifts codes deterministically: repeated conversions of the
     same value with the same key give identical codes when noise is off."""

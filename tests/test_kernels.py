@@ -1,4 +1,13 @@
-"""Pallas kernel vs pure-jnp oracle: shape/dtype sweep in interpret mode."""
+"""Pallas kernel vs pure-jnp oracles: in-kernel PRNG, fused scale, raggedness.
+
+The kernel generates its readout noise internally (counter-based Threefry on
+the global element position — see repro/core/prng.py), so the oracle match is
+*value-exact up to FMA contraction*: the deterministic int accumulation is
+bit-exact, and the noise term may differ by 1 ulp where XLA contracts
+``acc + sigma * z`` into an FMA in one lowering but not the other. Tests use
+``assert_allclose`` with ulp-scale rtol, plus strict equality on the
+noiseless integer path.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -6,7 +15,14 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cim import CIMSpec
+from repro.core import quant
+from repro.core.cim import (
+    CIMSpec,
+    cim_matmul_bit_exact,
+    output_noise_std_int,
+    output_noise_std_int_per_tile,
+)
+from repro.core.prng import threefry2x32
 from repro.kernels import ops, ref
 from repro.kernels.cim_matmul import cim_matmul_pallas
 
@@ -19,32 +35,81 @@ SHAPES = [
 ]
 
 
+def _rand_operands(m, k, n, lim=31, seed=None):
+    key = jax.random.PRNGKey(seed if seed is not None else m * 7 + k + n)
+    kx, kw = jax.random.split(key)
+    xq = jax.random.randint(kx, (m, k), -lim, lim + 1, dtype=jnp.int32)
+    wq = jax.random.randint(kw, (k, n), -lim, lim + 1, dtype=jnp.int32)
+    return xq.astype(jnp.int8), wq.astype(jnp.int8)
+
+
+def test_threefry_known_answer_vectors():
+    """Our Threefry-2x32-20 must match the Random123 reference vectors —
+    the whole oracle-exactness story rests on this primitive."""
+    cases = [
+        ((0, 0), (0, 0), (0x6B200159, 0x99BA4EFE)),
+        ((0xFFFFFFFF, 0xFFFFFFFF), (0xFFFFFFFF, 0xFFFFFFFF),
+         (0x1CB996FC, 0xBB002BE7)),
+        ((0x13198A2E, 0x03707344), (0x243F6A88, 0x85A308D3),
+         (0xC4923A9C, 0x483DF7A0)),
+    ]
+    for (k0, k1), (x0, x1), (e0, e1) in cases:
+        y0, y1 = threefry2x32(k0, k1, x0, x1)
+        assert (int(y0), int(y1)) == (e0, e1)
+
+
 @pytest.mark.parametrize("m,k,n", SHAPES)
 def test_kernel_matches_oracle(m, k, n):
-    key = jax.random.PRNGKey(m * 7 + k + n)
-    kx, kw, kn = jax.random.split(key, 3)
-    xq = jax.random.randint(kx, (m, k), -31, 32, dtype=jnp.int32).astype(jnp.int8)
-    wq = jax.random.randint(kw, (k, n), -31, 32, dtype=jnp.int32).astype(jnp.int8)
-    t = -(-k // 1024)
-    noise = jax.random.normal(kn, (t, m, n), jnp.float32)
-    y_k = cim_matmul_pallas(xq, wq, noise, sigma=3.5, interpret=True)
-    y_r = ref.cim_matmul_ref(xq, wq, noise, 3.5, 1024)
-    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-6, atol=1e-2)
+    xq, wq = _rand_operands(m, k, n)
+    y_k = cim_matmul_pallas(xq, wq, seed=1234, sigma=3.5, scale=0.37,
+                            interpret=True)
+    y_r = ref.cim_matmul_prng_ref(xq, wq, 1234, 3.5, 1024, 0.37)
+    # ulp-scale slack only (FMA contraction): a 1-ulp difference at
+    # intermediate accumulator magnitude (~2^11 -> 2.4e-4) can survive on a
+    # near-zero output, so atol is set above that; a wrong noise stream
+    # would be off by O(sigma * scale) ~ 1
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=5e-6, atol=2e-3)
 
 
 @pytest.mark.parametrize("m,k,n", SHAPES[:3])
 def test_kernel_noiseless_exact(m, k, n):
-    """sigma=0 path must equal the integer matmul exactly."""
-    key = jax.random.PRNGKey(k + 13)
-    kx, kw = jax.random.split(key)
-    xq = jax.random.randint(kx, (m, k), -127, 128, dtype=jnp.int32).astype(jnp.int8)
-    wq = jax.random.randint(kw, (k, n), -127, 128, dtype=jnp.int32).astype(jnp.int8)
-    y = cim_matmul_pallas(xq, wq, None, sigma=0.0, interpret=True)
+    """seed=None path must equal the integer matmul exactly (incl. the
+    fused scale epilogue, which is a single f32 multiply)."""
+    xq, wq = _rand_operands(m, k, n, lim=127, seed=k + 13)
+    y = cim_matmul_pallas(xq, wq, seed=None, sigma=0.0, interpret=True)
     exact = xq.astype(jnp.int32) @ wq.astype(jnp.int32)
     np.testing.assert_array_equal(np.asarray(y), np.asarray(exact).astype(np.float32))
 
 
-@settings(deadline=None, max_examples=12)
+def test_kernel_noise_invariant_to_block_shape():
+    """The noise counter is the global (row, col, tile): re-blocking the
+    kernel must not change a single bit of the output."""
+    xq, wq = _rand_operands(100, 2048, 130)
+    a = cim_matmul_pallas(xq, wq, seed=7, sigma=2.0, bm=256, bn=256,
+                          interpret=True)
+    b = cim_matmul_pallas(xq, wq, seed=7, sigma=2.0, bm=128, bn=128,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_noise_moments():
+    """In-kernel PRNG noise: per-tile std sigma, T tiles add in variance;
+    zero-input matmul isolates the noise term exactly."""
+    m, k, n = 256, 4096, 256  # T = 4 tiles
+    xq = jnp.zeros((m, k), jnp.int8)
+    wq = jnp.zeros((k, n), jnp.int8)
+    y = np.asarray(cim_matmul_pallas(xq, wq, seed=42, sigma=1.0, interpret=True))
+    se = 2.0 / np.sqrt(y.size)
+    assert abs(y.mean()) < 4 * se, y.mean()
+    assert abs(y.std() - 2.0) < 0.02, y.std()  # sqrt(T) * sigma = 2
+    # different seeds decorrelate
+    y2 = np.asarray(cim_matmul_pallas(xq, wq, seed=43, sigma=1.0, interpret=True))
+    rho = np.corrcoef(y.ravel(), y2.ravel())[0, 1]
+    assert abs(rho) < 0.02, rho
+
+
+@settings(deadline=None, max_examples=10)
 @given(
     m=st.integers(1, 96),
     kt=st.integers(1, 3),
@@ -54,15 +119,11 @@ def test_kernel_noiseless_exact(m, k, n):
 def test_kernel_property_sweep(m, kt, n, seed):
     """Property: kernel == oracle for random raggedness and tile counts."""
     k = kt * 512 + (seed % 97)
-    key = jax.random.PRNGKey(seed)
-    kx, kw, kn = jax.random.split(key, 3)
-    xq = jax.random.randint(kx, (m, k), -15, 16, dtype=jnp.int32).astype(jnp.int8)
-    wq = jax.random.randint(kw, (k, n), -15, 16, dtype=jnp.int32).astype(jnp.int8)
-    t = -(-k // 1024)
-    noise = jax.random.normal(kn, (t, m, n), jnp.float32)
-    y_k = cim_matmul_pallas(xq, wq, noise, sigma=1.7, interpret=True)
-    y_r = ref.cim_matmul_ref(xq, wq, noise, 1.7, 1024)
-    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-6, atol=1e-2)
+    xq, wq = _rand_operands(m, k, n, lim=15, seed=seed)
+    y_k = cim_matmul_pallas(xq, wq, seed=seed, sigma=1.7, interpret=True)
+    y_r = ref.cim_matmul_prng_ref(xq, wq, seed, 1.7, 1024)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=5e-6, atol=2e-3)
 
 
 def test_ops_wrapper_and_ste_grad():
@@ -88,6 +149,73 @@ def test_ops_batched_input():
     assert y.shape == (2, 5, 12)
     rel = (jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
     assert float(rel) < 0.1  # noiseless (key=None) -> quantization error only
+
+
+def test_ops_interpret_matches_ref_dispatch():
+    """force="pallas_interpret" and force="ref" run the same construction."""
+    xq, wq = _rand_operands(32, 1536, 24)
+    sigma, scale = 2.5, 0.01
+    y_p = ops.cim_matmul_int(xq, wq, jnp.int32(99), sigma, scale=scale,
+                             force="pallas_interpret")
+    y_r = ops.cim_matmul_int(xq, wq, jnp.int32(99), sigma, scale=scale,
+                             force="ref")
+    # ulp slack as in the oracle tests above, shrunk by the 0.01 scale
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                               rtol=5e-6, atol=2e-5)
+
+
+# ------------------------------------------------------- ragged-K sigma bug
+
+
+def test_per_tile_sigma_consistent_with_total():
+    spec = CIMSpec()
+    for k in (512, 640, 1024, 1536, 4096):
+        t = -(-k // spec.macro_rows)
+        per = output_noise_std_int_per_tile(spec, k)
+        np.testing.assert_allclose(per * np.sqrt(t),
+                                   output_noise_std_int(spec, k), rtol=1e-12)
+
+
+def test_ragged_k_sigma_matches_bit_exact():
+    """Regression (K % macro_rows != 0): the behavioral ops path must carry
+    the same total noise power as the bit-exact chain, whose analog gain is
+    fitted to the true K. The old per-tile sigma used gain(macro_rows),
+    overstating noise by sqrt(macro_rows/K) for K < macro_rows (~27% at
+    K=640)."""
+    spec = CIMSpec()
+    m, k, n, reps = 64, 640, 16, 8
+    qx = quant.qmax(spec.in_bits)
+    key = jax.random.PRNGKey(3)
+    kx, kw = jax.random.split(key)
+    xq = jax.random.randint(kx, (m, k), -qx, qx + 1)
+    wq = jax.random.randint(kw, (k, n), -qx, qx + 1)
+    exact = (xq @ wq).astype(jnp.float32)
+
+    # behavioral path injects the *total* per-tile sigma (quant + noise +
+    # static INL/DNL power as an equivalent Gaussian)
+    sigma = output_noise_std_int_per_tile(spec, k)
+    errs = []
+    for r in range(reps):
+        y = ops.cim_matmul_int(xq, wq, jnp.int32(1000 + r), sigma, force="ref")
+        errs.append(np.asarray(y - exact))
+    std_behav = np.concatenate(errs).std()
+    pred_total = output_noise_std_int(spec, k, include_static=True)
+    assert abs(std_behav / pred_total - 1.0) < 0.05, (std_behav, pred_total)
+
+    # bit-exact repeat-to-repeat variance isolates the *random* part; its
+    # gain is fitted to the true K — the quantity the old full-tile sigma
+    # overstated
+    ys = jnp.stack([
+        cim_matmul_bit_exact(xq, wq, jax.random.fold_in(key, r), spec)
+        for r in range(reps)
+    ])
+    std_bit = float(jnp.sqrt(jnp.mean(jnp.var(ys, axis=0)) * reps / (reps - 1)))
+    pred_noise = output_noise_std_int(spec, k, include_static=False)
+    assert 0.75 < std_bit / pred_noise < 1.25, (std_bit, pred_noise)
+
+    # and the old (buggy) full-tile sigma is measurably different
+    old_sigma = output_noise_std_int(spec, spec.macro_rows)
+    assert old_sigma / sigma > 1.2
 
 
 # ---------------------------------------------------------------- flash attn
