@@ -25,7 +25,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_swing, fig4_sac, fig5_column, fig6_summary,
-                            kernel_bench, roofline_report, vit_accuracy)
+                            kernel_bench, roofline_report, serving_bench,
+                            vit_accuracy)
 
     benches = {
         "fig5_column": fig5_column.run,
@@ -34,6 +35,7 @@ def main() -> None:
         "vit_accuracy": vit_accuracy.run,
         "fig4_sac": fig4_sac.run,
         "kernel_bench": kernel_bench.run,
+        "serving_bench": serving_bench.run,
         "roofline_report": roofline_report.run,
         "perf_gains": roofline_report.perf_gains,
     }

@@ -1,0 +1,117 @@
+"""Serving benchmark: steady-state decode throughput, fused vs per-slot loop.
+
+The fused ``Engine`` advances all ``max_slots`` slots with ONE jitted
+batch-axis decode program per token step and samples on device; the frozen
+seed ``LoopEngine`` dispatches one batch-1 program per slot per step and
+syncs every sampled token to the host. Both are measured at max_slots=4 on
+a shrunk qwen2 config, in ``off`` and ``sim`` CIM modes.
+
+Steady-state decode time is isolated by differencing two generates that
+share prompts (and therefore prefill work) but differ in new-token count:
+
+  decode_tok_s = slots * (long - short) / (t_long - t_short)
+
+Results append to BENCH_serving.json at the repo root (PR-over-PR record):
+
+  PYTHONPATH=src python -m benchmarks.serving_bench
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+SLOTS = 4
+PROMPT_LEN = 16
+SHORT, LONG = 4, 68
+
+
+def _setup():
+    from repro.configs.registry import get_config
+    from repro.models.model import build
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=256,
+                              vocab_size=256, n_heads=4, n_kv_heads=2,
+                              head_dim=32)
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, new_tokens: int):
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                        dtype=np.int32),
+                    max_new_tokens=new_tokens)
+            for _ in range(SLOTS)]
+
+
+def _timed_generate(engine, cfg, new_tokens: int) -> float:
+    t0 = time.perf_counter()
+    outs = engine.generate(_requests(cfg, new_tokens))
+    dt = time.perf_counter() - t0
+    assert all(len(o) == new_tokens for o in outs)
+    return dt
+
+
+def _decode_tok_s(engine_cls, cfg, params, mode: str) -> float:
+    engine = engine_cls(cfg, params, max_slots=SLOTS,
+                        max_len=PROMPT_LEN + LONG + 8, cim_mode=mode)
+    _timed_generate(engine, cfg, SHORT)          # compile prefill + decode
+    t_short = min(_timed_generate(engine, cfg, SHORT) for _ in range(2))
+    t_long = min(_timed_generate(engine, cfg, LONG) for _ in range(2))
+    return SLOTS * (LONG - SHORT) / max(t_long - t_short, 1e-9)
+
+
+def run() -> dict:
+    from repro.serving.engine import Engine, LoopEngine
+
+    cfg, params = _setup()
+    out: dict = {"slots": SLOTS, "prompt_len": PROMPT_LEN,
+                 "decode_tokens": LONG - SHORT}
+    for mode in ("off", "sim"):
+        fused = _decode_tok_s(Engine, cfg, params, mode)
+        loop = _decode_tok_s(LoopEngine, cfg, params, mode)
+        out[f"fused_decode_tok_s_{mode}"] = fused
+        out[f"loop_decode_tok_s_{mode}"] = loop
+        out[f"speedup_{mode}"] = fused / loop
+    _append_json(out)
+    return out
+
+
+def _append_json(entry: dict) -> None:
+    """Append this run to BENCH_serving.json (list of runs, newest last)."""
+    path = os.path.abspath(_BENCH_JSON)
+    runs = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                runs = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"WARNING: could not read {path} ({e}); starting a new "
+                  "run list", file=sys.stderr)
+            runs = []
+    if not isinstance(runs, list):
+        runs = [runs]
+    runs.append(dict(entry, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")))
+    try:
+        with open(path, "w") as f:
+            json.dump(runs, f, indent=1)
+    except OSError as e:
+        print(f"WARNING: could not write {path}: {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

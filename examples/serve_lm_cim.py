@@ -43,6 +43,7 @@ def main():
     api = build(cfg)
     params, _ = api.init(jax.random.PRNGKey(0))
 
+    # fused slot-batched engine: one jitted decode step advances both slots
     engine = Engine(cfg, params, max_slots=2, max_len=64, cim_mode="sim")
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
@@ -53,7 +54,8 @@ def main():
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
     print(f"served {len(reqs)} requests / {n_tok} tokens on the CIM model "
-          f"in {dt:.1f}s")
+          f"in {dt:.1f}s ({n_tok / dt:.1f} tok/s, "
+          f"{engine.prefill_traces} prefill traces)")
 
     # what would the macro burn per generated token?
     em = energy.calibrated_model()

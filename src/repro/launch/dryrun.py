@@ -99,7 +99,7 @@ def _gqa_cache_axes():
             "v": ("layers", "batch", "seq", "kv_heads", "head_dim"),
             "ks": ("layers", "batch", "seq", "kv_heads", None),
             "vs": ("layers", "batch", "seq", "kv_heads", None),
-            "len": ("layers",)}
+            "len": ("layers", "batch")}
 
 
 def cache_axes(cfg) -> Any:
@@ -110,7 +110,7 @@ def cache_axes(cfg) -> Any:
         if cfg.mla is not None:
             return {"ckv": ("layers", "batch", "seq", None),
                     "krope": ("layers", "batch", "seq", None),
-                    "len": ("layers",)}
+                    "len": ("layers", "batch")}
         return _gqa_cache_axes()
     if fam == "ssm":
         return {"conv": ("layers", "batch", None, "mlp"),
@@ -226,6 +226,8 @@ def _lower_cell(cfg, shape: ShapeConfig, mesh, rules: ShardingRules):
 
 def _analyze(compiled) -> Dict[str, float]:
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # per-device list on some jaxlib versions
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes_accessed": float(cost.get("bytes accessed", 0.0)),

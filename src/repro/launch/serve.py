@@ -1,7 +1,11 @@
 """Serving CLI: batched generation with CIM-sim linears.
 
+Defaults to the fused slot-batched engine (one jitted decode step advances
+all slots, DESIGN.md §10); ``--engine loop`` runs the frozen per-slot
+reference engine for comparison.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-      --requests 6 --new-tokens 12 [--cim sim]
+      --requests 6 --new-tokens 12 [--cim sim] [--engine fused|loop]
 """
 
 from __future__ import annotations
@@ -14,7 +18,7 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models.model import build
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, LoopEngine, Request
 
 
 def main():
@@ -26,6 +30,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--cim", default="off", choices=["off", "sim"])
+    ap.add_argument("--engine", default="fused", choices=["fused", "loop"])
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -33,9 +38,10 @@ def main():
         cfg = cfg.reduced()
     api = build(cfg)
     params, _ = api.init(jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_slots=args.slots,
-                    max_len=args.prompt_len + args.new_tokens + 8,
-                    cim_mode=args.cim)
+    engine_cls = Engine if args.engine == "fused" else LoopEngine
+    engine = engine_cls(cfg, params, max_slots=args.slots,
+                        max_len=args.prompt_len + args.new_tokens + 8,
+                        cim_mode=args.cim)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
                                         dtype=np.int32),
@@ -45,8 +51,8 @@ def main():
     outs = engine.generate(reqs)
     dt = time.time() - t0
     total_tokens = sum(len(o) for o in outs)
-    print(f"served {len(reqs)} requests, {total_tokens} tokens "
-          f"in {dt:.1f}s ({total_tokens / dt:.1f} tok/s)")
+    print(f"[{args.engine}] served {len(reqs)} requests, {total_tokens} "
+          f"tokens in {dt:.1f}s ({total_tokens / dt:.1f} tok/s)")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:10]}...")
 

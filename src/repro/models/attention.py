@@ -6,9 +6,15 @@ All paths support three phases:
   * decode   — one query token against the cache (functional update)
 
 KV caches are plain pytrees so they shard/checkpoint like params. GQA cache:
-{"k": (B, S, KV, D), "v": ..., "len": ()}; MLA caches the *compressed* c_kv
+{"k": (B, S, KV, D), "v": ..., "len": (B,)}; MLA caches the *compressed* c_kv
 (B, S, kv_lora) + shared k_rope (B, S, rope_hd) — the arch's serving-memory
 win — and up-projects per step.
+
+``len`` is *per sequence*: every cached row advances independently, which is
+what lets the serving engine fuse ragged continuous-batching slots into one
+batch-axis decode program (DESIGN.md §10). Writes are per-row
+``dynamic_update_slice`` (vmapped over batch) and the attention mask combines
+per-row causality with per-row key validity.
 """
 
 from __future__ import annotations
@@ -45,12 +51,12 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict[st
             "v": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
             "ks": jnp.zeros((batch, max_len, kv, 1), jnp.float32),
             "vs": jnp.zeros((batch, max_len, kv, 1), jnp.float32),
-            "len": jnp.zeros((), jnp.int32),
+            "len": jnp.zeros((batch,), jnp.int32),
         }
     return {
         "k": jnp.zeros((batch, max_len, kv, hd), dtype),
         "v": jnp.zeros((batch, max_len, kv, hd), dtype),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -84,6 +90,31 @@ def _causal_mask(s: int, t: int, offset: int = 0) -> jnp.ndarray:
     return (kj <= qi)[None, None]
 
 
+def row_update(cache_arr: jnp.ndarray, update: jnp.ndarray,
+               starts: jnp.ndarray) -> jnp.ndarray:
+    """Per-row cache write: row b of ``update`` lands at ``starts[b]`` along
+    the sequence axis (axis 1). starts: (B,) int32."""
+    return jax.vmap(
+        lambda c, u, st: jax.lax.dynamic_update_slice_in_dim(c, u, st, axis=0)
+    )(cache_arr, update.astype(cache_arr.dtype), starts)
+
+
+def _cached_mask(start: jnp.ndarray, s: int, t: int) -> jnp.ndarray:
+    """(B, 1, s, t) decode/prefill mask for per-sequence cache lengths.
+
+    Query i of row b sits at absolute position start[b]+i; it may attend key
+    slot j iff j is causal (j <= start[b]+i) *and* j holds a written key
+    (j < start[b]+s). Causality implies validity here, but the validity term
+    is kept explicit: recycled slots keep stale keys beyond the row's length
+    and must never expose them.
+    """
+    qi = jnp.arange(s)[None, :] + start[:, None]            # (B, s)
+    kj = jnp.arange(t)                                      # (t,)
+    mask = (kj[None, None, :] <= qi[:, :, None]) & \
+           (kj[None, None, :] < (start + s)[:, None, None])
+    return mask[:, None]
+
+
 def gqa_attention(
     ctx: Ctx,
     p: Params,
@@ -111,33 +142,27 @@ def gqa_attention(
         out = _sdpa(q, k, v, _causal_mask(s, s) if causal else None)
         new_cache = None
     else:
-        start = cache["len"]
+        start = cache["len"]                     # (B,) per-sequence lengths
         int8_cache = "ks" in cache
         if int8_cache:
             kq, ks_ = _kv_quant(k)
             vq, vs_ = _kv_quant(v)
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, start, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, start, axis=1)
-            cks = jax.lax.dynamic_update_slice_in_dim(cache["ks"], ks_, start, axis=1)
-            cvs = jax.lax.dynamic_update_slice_in_dim(cache["vs"], vs_, start, axis=1)
+            ck = row_update(cache["k"], kq, start)
+            cv = row_update(cache["v"], vq, start)
+            cks = row_update(cache["ks"], ks_, start)
+            cvs = row_update(cache["vs"], vs_, start)
             new_cache = {"k": ck, "v": cv, "ks": cks, "vs": cvs, "len": start + s}
             ck_f = (ck.astype(jnp.float32) * cks).astype(x.dtype)
             cv_f = (cv.astype(jnp.float32) * cvs).astype(x.dtype)
         else:
-            ck = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), start, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), start, axis=1)
+            ck = row_update(cache["k"], k, start)
+            cv = row_update(cache["v"], v, start)
             new_cache = {"k": ck, "v": cv, "len": start + s}
             ck_f, cv_f = ck, cv
         t = ck.shape[1]
         ck_s = shard(ck_f, "batch", "seq", "kv_heads", "head_dim")
         cv_s = shard(cv_f, "batch", "seq", "kv_heads", "head_dim")
-        # valid = causal up to start + s
-        qi = jnp.arange(s)[:, None] + start
-        kj = jnp.arange(t)[None, :]
-        mask = (kj <= qi)[None, None]
-        out = _sdpa(q, ck_s, cv_s, mask)
+        out = _sdpa(q, ck_s, cv_s, _cached_mask(start, s, t))
 
     out = out.reshape(b, s, h * hd)
     return dense(ctx, p["o"], out, "attn_out"), new_cache
@@ -202,7 +227,7 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict[st
     return {
         "ckv": jnp.zeros((batch, max_len, a.kv_lora), dtype),
         "krope": jnp.zeros((batch, max_len, a.rope_head_dim), dtype),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -229,21 +254,17 @@ def mla_attention(
     krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
 
     if cache is not None:
-        start = cache["len"]
-        ckv_all = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), start, axis=1)
-        krope_all = jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], krope.astype(cache["krope"].dtype), start, axis=1)
+        start = cache["len"]                     # (B,) per-sequence lengths
+        ckv_all = row_update(cache["ckv"], ckv, start)
+        krope_all = row_update(cache["krope"], krope, start)
         new_cache = {"ckv": ckv_all, "krope": krope_all, "len": start + s}
         t = ckv_all.shape[1]
-        offset = start
     else:
-        ckv_all, krope_all, new_cache, t, offset = ckv, krope, None, s, 0
+        start = jnp.zeros((b,), jnp.int32)
+        ckv_all, krope_all, new_cache, t = ckv, krope, None, s
 
     scale = 1.0 / jnp.sqrt(a.nope_head_dim + a.rope_head_dim).astype(jnp.float32)
-    qi = jnp.arange(s)[:, None] + offset
-    kj = jnp.arange(t)[None, :]
-    causal = (kj <= qi)[None, None]
+    causal = _cached_mask(start, s, t)           # (B, 1, s, t)
 
     if s == 1 and cache is not None:
         # *absorbed* decode (DeepSeek-V2 §2.1.2): fold W_uk into the query and

@@ -249,6 +249,65 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Any:
 
 
 # --------------------------------------------------------------------------
+# slot-batched cache helpers (serving engine, DESIGN.md §10)
+# --------------------------------------------------------------------------
+#
+# Stacked caches put the batch ("slot") axis right after the layer-stack
+# axes: one leading 'layers' axis everywhere except the hybrid family's
+# mamba sub-tree, which stacks twice (super-block x inner layer).
+
+
+def _slot_axis(path) -> int:
+    if any(getattr(p, "key", None) == "mamba" for p in path):
+        return 2
+    return 1
+
+
+def _is_len(path) -> bool:
+    return bool(path) and getattr(path[-1], "key", None) == "len"
+
+
+def take_slot(caches, slot) -> Any:
+    """Batch-1 slice of one slot row from a stacked slot-cache pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jax.lax.dynamic_slice_in_dim(
+            leaf, slot, 1, axis=_slot_axis(path)),
+        caches)
+
+
+def put_slot(caches, slot_caches, slot) -> Any:
+    """Write a batch-1 slot cache back into row ``slot`` of the stacked
+    cache. The inverse of ``take_slot``; never re-allocates the big cache
+    (a pure dynamic_update_slice per leaf, in-place under donation)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, big, one: jax.lax.dynamic_update_slice_in_dim(
+            big, one.astype(big.dtype), slot, axis=_slot_axis(path)),
+        caches, slot_caches)
+
+
+def set_cache_lens(caches, value) -> Any:
+    """Overwrite every per-sequence 'len' leaf with ``value`` (broadcast)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: jnp.broadcast_to(
+            jnp.asarray(value, leaf.dtype), leaf.shape)
+        if _is_len(path) else leaf,
+        caches)
+
+
+def mask_cache_advance(new_caches, old_caches, active) -> Any:
+    """Freeze the lengths of inactive slots after a fused decode step.
+
+    active: (B,) bool. Non-len leaves keep the new value — inactive rows'
+    K/V/state writes land in junk space that the per-row masks never expose
+    and that prefill fully rewrites on slot recycle.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, new, old: jnp.where(active[None, :], new, old)
+        if _is_len(path) else new,
+        new_caches, old_caches)
+
+
+# --------------------------------------------------------------------------
 # forward passes
 # --------------------------------------------------------------------------
 
@@ -293,8 +352,7 @@ def forward(params: Params, batch: Dict[str, Any], cfg: ModelConfig,
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         cache_arg = None
     else:
-        start = _cache_len(cfg, caches)
-        positions = jnp.broadcast_to(jnp.arange(s)[None] + start, (b, s))
+        positions = _cache_positions(cfg, caches, b, s)
         cache_arg = caches
     x, new_caches = _scan_blocks(ctx, params["blocks"], _BLOCKS[cfg.family][1],
                                  x, positions, cache_arg)
@@ -304,13 +362,21 @@ def forward(params: Params, batch: Dict[str, Any], cfg: ModelConfig,
 
 
 def _cache_len(cfg: ModelConfig, caches) -> jnp.ndarray:
+    """Per-sequence lengths (B,) already written into the cache."""
     if cfg.family == "ssm":
-        return jnp.zeros((), jnp.int32)  # state caches carry no length
+        batch = jax.tree.leaves(caches)[0].shape[1]
+        return jnp.zeros((batch,), jnp.int32)  # state caches carry no length
     if cfg.family == "hybrid":
         return caches["attn"]["len"][0]
     if cfg.family == "encdec":
         return caches["self"]["len"][0]
     return caches["len"][0]
+
+
+def _cache_positions(cfg: ModelConfig, caches, b: int, s: int) -> jnp.ndarray:
+    """(B, S) absolute positions for the next ``s`` tokens of every row."""
+    start = _cache_len(cfg, caches)
+    return jnp.broadcast_to(jnp.arange(s)[None] + start[:, None], (b, s))
 
 
 def _hybrid_forward(params, batch, cfg, ctx, caches=None):
@@ -319,7 +385,7 @@ def _hybrid_forward(params, batch, cfg, ctx, caches=None):
     if caches is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     else:
-        positions = jnp.broadcast_to(jnp.arange(s)[None] + _cache_len(cfg, caches), (b, s))
+        positions = _cache_positions(cfg, caches, b, s)
     n_super = cfg.n_layers // cfg.attn_period
     n_mamba = cfg.attn_period - 1
     base_key = ctx.key if ctx.key is not None else jax.random.PRNGKey(0)
@@ -393,11 +459,13 @@ def _encdec_forward(params, batch, cfg, ctx, caches=None):
 
     x = embed(params["embed"], batch["tokens"], dt)
     b, s, _ = x.shape
-    start = _cache_len(cfg, caches) if caches is not None else 0
-    pos_idx = jnp.arange(s) + start
-    x = x + sinusoidal_positions(pos_idx, cfg.d_model).astype(dt)[None]
+    if caches is not None:
+        positions = _cache_positions(cfg, caches, b, s)        # (B, S)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = x + jax.vmap(lambda p: sinusoidal_positions(p, cfg.d_model))(
+        positions).astype(dt)
     x = shard(x, "batch", "seq", "embed")
-    positions = jnp.broadcast_to(pos_idx[None], (b, s))
     base_key = ctx.key if ctx.key is not None else jax.random.PRNGKey(0)
 
     def dec_body(h, xs):

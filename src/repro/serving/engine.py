@@ -1,15 +1,28 @@
-"""Batched serving engine: prefill + decode with KV caches, CIM-sim linears.
+"""Slot-batched continuous-batching serving engine (DESIGN.md §10).
 
-Slot-based continuous batching (vLLM-lite): a fixed decode batch of
-``max_slots`` sequences; finished sequences release their slot and the next
-queued request is prefilled into it. Prefill and decode are two jitted
-programs (the dry-run lowers exactly these for the serve shapes).
+Two engines share the ``Request`` API:
+
+* ``Engine`` — the fused production engine. One stacked KV/state cache
+  pytree of batch = ``max_slots`` is allocated once; a single jitted decode
+  program advances *every* active slot per step against per-sequence cache
+  lengths, samples the next token on device (temperature or argmax per row)
+  and never round-trips a token through the host — emitted tokens are
+  drained device→host in periodic batches. Prefill pads prompts into
+  power-of-two length buckets (attention families) so at most
+  O(log2 max_len) prefill traces exist, and writes the prefilled rows into
+  their slot with ``dynamic_update_slice`` — slot recycling never
+  re-allocates the cache.
+
+* ``LoopEngine`` — the frozen seed reference ("vLLM-lite"): one batch-1
+  cache per slot and one jitted decode dispatch per slot per token, with a
+  host sync in ``_sample``. Kept verbatim for the fused-vs-loop equality
+  test and as the baseline of ``benchmarks/serving_bench.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +31,6 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
 from repro.models.layers import Ctx
-from repro.models.model import build
 
 
 @dataclasses.dataclass
@@ -29,7 +41,211 @@ class Request:
     out_tokens: Optional[List[int]] = None
 
 
+def _pow2_bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
+                   key: jax.Array) -> jnp.ndarray:
+    """(B, V) logits + (B,) temps -> (B,) int32; argmax rows where temp<=0."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe = jnp.where(temps > 0, temps, 1.0)
+    sampled = jax.random.categorical(
+        key, logits.astype(jnp.float32) / safe[:, None], axis=-1)
+    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+
+
 class Engine:
+    """Fused slot-batched engine: one jitted step advances all slots."""
+
+    # right-padded prefill is masked out by the per-row causal/validity mask
+    # for attention caches. Exact-length prefill (no bucketing) elsewhere:
+    # recurrent SSM state would absorb the pad tokens, and MoE expert
+    # capacity scales with the padded token count (pad tokens would change
+    # keep/drop routing decisions vs exact length).
+    _BUCKETED_FAMILIES = ("dense", "vlm")
+
+    def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
+                 max_len: int = 512, cim_mode: Optional[str] = None,
+                 seed: int = 0, drain_every: int = 64):
+        if cfg.family == "encdec":
+            raise ValueError("encdec serving needs per-request encoder "
+                             "frames; the token-only engines don't carry them")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.drain_every = drain_every
+        self.key = jax.random.PRNGKey(seed)
+        self._bucketed = cfg.family in self._BUCKETED_FAMILIES
+        mode = cim_mode if cim_mode is not None else cfg.cim.mode
+
+        # allocated once; recycled for the lifetime of the engine
+        self.caches = tf.init_caches(cfg, max_slots, max_len)
+        self.last_tok = jnp.zeros((max_slots,), jnp.int32)
+
+        def prefill_fn(params, caches, last_tok, tokens, true_len, slot,
+                       temp, key):
+            """Prefill one request into its slot of the stacked cache."""
+            kctx, ksamp = jax.random.split(key)
+            ctx = Ctx.make(cfg, kctx, mode=mode)
+            # full zero reset, not just len: a 1-token prompt hits the SSM
+            # *decode* branch, which reads conv/state — stale recurrent state
+            # from the slot's previous occupant must not leak in
+            slot_cache = jax.tree.map(jnp.zeros_like, tf.take_slot(caches, slot))
+            logits, slot_cache = tf.forward(params, {"tokens": tokens}, cfg,
+                                            ctx, slot_cache)
+            # last *valid* position of the (possibly right-padded) prompt
+            last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+                                                keepdims=False)    # (1, V)
+            slot_cache = tf.set_cache_lens(slot_cache, true_len)
+            caches = tf.put_slot(caches, slot_cache, slot)
+            tok = _sample_tokens(last, jnp.full((1,), temp, jnp.float32),
+                                 ksamp)[0]
+            return caches, last_tok.at[slot].set(tok), tok
+
+        def decode_fn(params, caches, last_tok, active, temps, key):
+            """One fused step: every active slot emits its next token."""
+            kctx, ksamp = jax.random.split(key)
+            ctx = Ctx.make(cfg, kctx, mode=mode)
+            logits, new_caches = tf.forward(
+                params, {"tokens": last_tok[:, None]}, cfg, ctx, caches)
+            toks = _sample_tokens(logits[:, -1], temps, ksamp)
+            toks = jnp.where(active, toks, last_tok)
+            new_caches = tf.mask_cache_advance(new_caches, caches, active)
+            return new_caches, toks
+
+        # donate only the cache: last_tok/toks arrays stay referenced by the
+        # pending-drain token log until device_get, so they must not alias
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------ API
+    @property
+    def prefill_traces(self) -> int:
+        """Number of distinct prefill programs traced (== length buckets)."""
+        return int(self._prefill._cache_size())
+
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        """Run all requests to completion; returns generated token lists."""
+        self._validate(requests)
+        queue = list(requests)
+        for r in queue:
+            r.out_tokens = []
+        req_index = {id(r): i for i, r in enumerate(requests)}
+
+        slots: List[Optional[Request]] = [None] * self.max_slots
+        counts = [0] * self.max_slots
+        # emitted tokens stay on device until drained:
+        # ("p", scalar_dev_tok, req_idx) | ("d", (B,) dev_toks, per-slot idx)
+        pend: List[Tuple[str, Any, Any]] = []
+
+        def drain():
+            if not pend:
+                return
+            vals = jax.device_get([e[1] for e in pend])
+            for (kind, _, meta), v in zip(pend, vals):
+                if kind == "p":
+                    requests[meta].out_tokens.append(int(v))
+                else:
+                    for s, ri in enumerate(meta):
+                        if ri is not None:
+                            requests[ri].out_tokens.append(int(v[s]))
+            pend.clear()
+
+        def fill_slots():
+            for s in range(self.max_slots):
+                while slots[s] is None and queue:
+                    r = queue.pop(0)
+                    prompt = np.asarray(r.prompt, np.int32)
+                    true_len = prompt.shape[0]
+                    bucket = (min(_pow2_bucket(true_len), self.max_len)
+                              if self._bucketed else true_len)
+                    padded = np.zeros((1, bucket), np.int32)
+                    padded[0, :true_len] = prompt
+                    self.caches, self.last_tok, tok = self._prefill(
+                        self.params, self.caches, self.last_tok,
+                        jnp.asarray(padded), true_len, s,
+                        float(r.temperature), self._next_key())
+                    pend.append(("p", tok, req_index[id(r)]))
+                    if r.max_new_tokens > 1:
+                        slots[s] = r
+                        counts[s] = 1
+
+        def slot_state():
+            act = np.array([r is not None for r in slots])
+            tmp = np.array([float(r.temperature) if r is not None else 0.0
+                            for r in slots], np.float32)
+            return jnp.asarray(act), jnp.asarray(tmp)
+
+        fill_slots()
+        active, temps = slot_state()
+        steps = 0
+        while any(r is not None for r in slots):
+            self.caches, toks = self._decode(
+                self.params, self.caches, self.last_tok, active, temps,
+                self._next_key())
+            self.last_tok = toks
+            pend.append(("d", toks,
+                         [req_index[id(r)] if r is not None else None
+                          for r in slots]))
+            turnover = False
+            for s, r in enumerate(slots):
+                if r is None:
+                    continue
+                counts[s] += 1
+                if counts[s] >= r.max_new_tokens:
+                    slots[s] = None
+                    turnover = True
+            if turnover:
+                fill_slots()
+                active, temps = slot_state()
+            if len(pend) >= self.drain_every:
+                drain()
+            steps += 1
+            if steps > 100_000:
+                raise RuntimeError("serving engine ran away")
+        drain()
+        return [r.out_tokens for r in requests]
+
+    # ------------------------------------------------------------- helpers
+    def _validate(self, requests: List[Request]) -> None:
+        for i, r in enumerate(requests):
+            prompt = np.asarray(r.prompt)
+            if prompt.ndim != 1 or prompt.shape[0] < 1:
+                raise ValueError(
+                    f"request {i}: prompt must be a non-empty 1-D token "
+                    f"array, got shape {prompt.shape}")
+            if r.max_new_tokens < 1:
+                raise ValueError(
+                    f"request {i}: max_new_tokens must be >= 1, got "
+                    f"{r.max_new_tokens}")
+            total = prompt.shape[0] + r.max_new_tokens
+            if total > self.max_len:
+                raise ValueError(
+                    f"request {i}: prompt length {prompt.shape[0]} + "
+                    f"max_new_tokens {r.max_new_tokens} = {total} overflows "
+                    f"the engine's max_len={self.max_len}; raise max_len or "
+                    f"shorten the request")
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+
+class LoopEngine:
+    """Frozen seed engine: per-slot batch-1 caches, one decode dispatch per
+    slot per token, host sync per sampled token. Reference/baseline only.
+
+    Known seed quirk (kept frozen): a request with ``max_new_tokens == 1``
+    emits 2 tokens — the slot is occupied unconditionally after prefill and
+    the limit is only checked after the first decode. The fused ``Engine``
+    honors the limit exactly, so fused-vs-loop equality holds for
+    ``max_new_tokens >= 2``."""
+
     def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
                  max_len: int = 512, cim_mode: Optional[str] = None,
                  seed: int = 0):
@@ -83,8 +299,8 @@ class Engine:
 
         try_fill_slots()
         while any(s is not None for s in slots):
-            # batched decode over active slots (ragged -> loop; a production
-            # engine fuses slots into one batch-axis program)
+            # ragged per-slot decode loop — the dispatch pattern the fused
+            # Engine replaces with one batch-axis program
             for s in range(self.max_slots):
                 r = slots[s]
                 if r is None:
