@@ -1,9 +1,12 @@
-"""Shared benchmark utilities: timing + a cached trained tiny ViT."""
+"""Shared benchmark utilities: timing, BENCH_*.json run records + a cached
+trained tiny ViT."""
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import sys
 import time
 from typing import Callable, Tuple
 
@@ -12,6 +15,31 @@ import jax.numpy as jnp
 import numpy as np
 
 CACHE = "/tmp/repro_bench_cache"
+
+
+def append_run(path: str, entry: dict) -> None:
+    """Append ``entry`` to the BENCH_*.json run list at ``path`` (newest
+    last, timestamped) — the PR-over-PR perf record every bench keeps."""
+    path = os.path.abspath(path)
+    runs = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                runs = json.load(f)
+        except (OSError, ValueError) as e:
+            # starting over loses the recorded baseline history — say so
+            print(f"WARNING: could not read {path} ({e}); starting a new "
+                  "run list", file=sys.stderr)
+            runs = []
+    if not isinstance(runs, list):
+        runs = [runs]
+    runs.append(dict(entry, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")))
+    try:
+        with open(path, "w") as f:
+            json.dump(runs, f, indent=1)
+    except OSError as e:
+        # the record *is* this function's purpose — never fail silently
+        print(f"WARNING: could not write {path}: {e}", file=sys.stderr)
 
 
 def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -22,9 +22,7 @@ trajectory is tracked PR over PR:
 
 from __future__ import annotations
 
-import json
 import os
-import sys
 import time
 
 import jax
@@ -122,32 +120,9 @@ def run() -> dict:
     out.update(bench_behavioral())
     baseline = os.environ.get("KERNEL_BENCH_BASELINE", "1") != "0"
     out.update(bench_bit_exact(include_baseline=baseline))
-    _append_json(out)
+    from benchmarks.common import append_run
+    append_run(_BENCH_JSON, out)
     return out
-
-
-def _append_json(entry: dict) -> None:
-    """Append this run to BENCH_kernels.json (list of runs, newest last)."""
-    path = os.path.abspath(_BENCH_JSON)
-    runs = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                runs = json.load(f)
-        except (OSError, ValueError) as e:
-            # starting over loses the recorded baseline history — say so
-            print(f"WARNING: could not read {path} ({e}); starting a new "
-                  "run list", file=sys.stderr)
-            runs = []
-    if not isinstance(runs, list):
-        runs = [runs]
-    runs.append(dict(entry, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")))
-    try:
-        with open(path, "w") as f:
-            json.dump(runs, f, indent=1)
-    except OSError as e:
-        # the record *is* this function's purpose — never fail silently
-        print(f"WARNING: could not write {path}: {e}", file=sys.stderr)
 
 
 if __name__ == "__main__":

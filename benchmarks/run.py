@@ -24,9 +24,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (fig2_swing, fig4_sac, fig5_column, fig6_summary,
-                            kernel_bench, roofline_report, serving_bench,
-                            vit_accuracy)
+    from benchmarks import (attention_bench, fig2_swing, fig4_sac,
+                            fig5_column, fig6_summary, kernel_bench,
+                            roofline_report, serving_bench, vit_accuracy)
 
     benches = {
         "fig5_column": fig5_column.run,
@@ -36,6 +36,7 @@ def main() -> None:
         "fig4_sac": fig4_sac.run,
         "kernel_bench": kernel_bench.run,
         "serving_bench": serving_bench.run,
+        "attention_bench": attention_bench.run,
         "roofline_report": roofline_report.run,
         "perf_gains": roofline_report.perf_gains,
     }

@@ -19,9 +19,7 @@ Results append to BENCH_serving.json at the repo root (PR-over-PR record):
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
-import sys
 import time
 
 import jax
@@ -86,30 +84,9 @@ def run() -> dict:
         out[f"fused_decode_tok_s_{mode}"] = fused
         out[f"loop_decode_tok_s_{mode}"] = loop
         out[f"speedup_{mode}"] = fused / loop
-    _append_json(out)
+    from benchmarks.common import append_run
+    append_run(_BENCH_JSON, out)
     return out
-
-
-def _append_json(entry: dict) -> None:
-    """Append this run to BENCH_serving.json (list of runs, newest last)."""
-    path = os.path.abspath(_BENCH_JSON)
-    runs = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                runs = json.load(f)
-        except (OSError, ValueError) as e:
-            print(f"WARNING: could not read {path} ({e}); starting a new "
-                  "run list", file=sys.stderr)
-            runs = []
-    if not isinstance(runs, list):
-        runs = [runs]
-    runs.append(dict(entry, timestamp=time.strftime("%Y-%m-%dT%H:%M:%S")))
-    try:
-        with open(path, "w") as f:
-            json.dump(runs, f, indent=1)
-    except OSError as e:
-        print(f"WARNING: could not write {path}: {e}", file=sys.stderr)
 
 
 if __name__ == "__main__":

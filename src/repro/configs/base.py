@@ -89,6 +89,12 @@ class ModelConfig:
 
     max_seq_len: int = 8192
     dtype: str = "bfloat16"
+    attn_impl: str = "einsum"     # "einsum" | "kernel": einsum is the dense
+                                  # masked-softmax oracle; "kernel" routes
+                                  # cached GQA attention through the Pallas
+                                  # length-aware decode / flash prefill
+                                  # kernels (O(len) decode, interpret-mode
+                                  # validated on CPU)
     kv_cache_int8: bool = False   # quantized GQA cache (per-token/head scale):
                                   # halves serving HBM, the paper's quantized-
                                   # storage spirit applied to the cache

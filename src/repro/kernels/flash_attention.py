@@ -9,13 +9,27 @@ so HBM traffic drops from O(s*t) to O(s*d + t*d) per head.
 
 TPU mapping: block_q x d and block_k x d tiles are MXU-aligned (128
 multiples); the two dots per step (q@k^T and p@v) hit the MXU; the
-rescaling is VPU elementwise on (block_q,) vectors. Causal masking is
-applied in-kernel via block-relative iota (blocks fully above the diagonal
-still run but contribute exp(-inf)=0; skipping them via grid pruning is a
-further ~2x and left as future work).
+rescaling is VPU elementwise on (block_q,) vectors.
+
+Causal masking is applied in-kernel via block-relative iota, and k blocks
+strictly above the causal frontier of their q block are *pruned*: the body
+is gated off with ``pl.when`` (no MXU work — the ~2x the original
+docstring left as future work) and the k/v BlockSpec index maps clamp the
+block index onto the frontier block, so the revisited index issues no new
+HBM->VMEM DMA. Pruning is bit-exact: a fully-masked block contributes
+p = exp(-inf - m) = 0 to the accumulator and leaves m/l unchanged.
+
+Per-row ``start`` offsets (``attention._cached_mask`` semantics) support
+prefill against a partially filled slot cache: query i of row b sits at
+absolute position start[b]+i, attends keys j <= start[b]+i and
+j < start[b]+s (slot validity — recycled slots keep stale keys beyond the
+row's length). ``start`` is scalar-prefetched (SMEM) so both the in-kernel
+masks and the pruning frontier are per-row dynamic.
 
 Validated against ``ref.flash_attention_ref`` in interpret mode
-(tests/test_kernels.py).
+(tests/test_kernels.py); ``return_block_counts=True`` additionally returns
+the per-(row, q-block) count of k blocks actually computed, which the
+pruning tests assert against the closed-form ceil((qi_max+1)/block_k).
 """
 
 from __future__ import annotations
@@ -32,9 +46,17 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, scale: float, causal: bool, block_q: int, block_k: int,
-            n_k: int, t_valid: int):
+def _kernel(start_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+            scale: float, causal: bool, bounded: bool, count: bool,
+            block_q: int, block_k: int, n_k: int, t_valid: int,
+            s_valid: int):
+    if count:
+        counts_ref, m_ref, l_ref, acc_ref, cnt_ref = rest
+    else:
+        m_ref, l_ref, acc_ref, cnt_ref = rest
+        counts_ref = None
+    b = pl.program_id(0)
+    qb = pl.program_id(1)
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -42,79 +64,141 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        cnt_ref[0] = 0
 
-    q = q_ref[0]                                   # (bq, d)
-    k = k_ref[0]                                   # (bk, d)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-
-    qi = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 0)
-    kj = kb * block_k + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 1)
-    mask = kj < t_valid                            # padded keys contribute 0
+    start_b = start_ref[b]
     if causal:
-        mask &= kj <= qi
-    s = jnp.where(mask, s, NEG_INF)
+        # last absolute query position this q block can hold — k blocks
+        # strictly beyond it are fully masked and skipped (causal pruning)
+        q_abs_max = start_b + jnp.minimum((qb + 1) * block_q, s_valid) - 1
+        live = kb * block_k <= q_abs_max
+    else:
+        live = kb * block_k < t_valid
 
-    m_prev = m_ref[...]                            # (bq,)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])                # (bq, bk)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
-    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
-        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+    @pl.when(live)
+    def _compute():
+        cnt_ref[0] += 1
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]                                   # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        qi = qb * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kj = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = kj < t_valid                            # padded keys -> 0
+        if bounded:                                    # slot validity
+            mask &= kj < start_b + s_valid
+        if causal:
+            mask &= kj <= qi + start_b
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])                # (bq, bk)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(kb == n_k - 1)
     def _done():
         denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
         o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        if count:
+            counts_ref[0, 0] = cnt_ref[0]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "block_q", "block_k", "interpret"))
+    static_argnames=("causal", "block_q", "block_k", "interpret",
+                     "return_block_counts"))
 def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
     causal: bool = True,
+    start: jnp.ndarray | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = False,
-) -> jnp.ndarray:
-    """q: (BH, S, D); k, v: (BH, T, D) -> (BH, S, D). Softmax over T."""
+    interpret: bool | None = None,
+    return_block_counts: bool = False,
+):
+    """q: (BH, S, D); k, v: (BH, T, D) -> (BH, S, D). Softmax over T.
+
+    ``start: (BH,)`` int32 per-row absolute offsets (requires ``causal``):
+    query i of row b attends keys j <= start[b]+i and j < start[b]+S.
+    ``return_block_counts`` additionally returns (BH, n_q_blocks) int32 —
+    how many k blocks each q block actually computed (pruning witness).
+    ``interpret`` defaults to auto (True on non-TPU backends).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     bh, s, d = q.shape
     _, t, _ = k.shape
+    bounded = start is not None
+    if bounded and not causal:
+        raise ValueError("per-row start offsets require causal attention")
     scale = 1.0 / (d ** 0.5)
     sq = -(-s // block_q) * block_q
     tk = -(-t // block_k) * block_k
     qp = jnp.pad(q, ((0, 0), (0, sq - s), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, tk - t), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, tk - t), (0, 0)))
+    start_arr = (jnp.zeros((bh,), jnp.int32) if start is None
+                 else start.astype(jnp.int32))
 
+    n_q = sq // block_q
     n_k = tk // block_k
-    grid = (bh, sq // block_q, n_k)
-    out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, causal=causal,
-                          block_q=block_q, block_k=block_k, n_k=n_k,
-                          t_valid=t),
-        grid=grid,
+
+    def q_map(b, i, j, st):
+        return (b, i, 0)
+
+    def kv_map(b, i, j, st):
+        if causal:
+            # clamp pruned blocks onto the causal-frontier block: the
+            # repeated block index elides the DMA
+            last = (st[b] + jnp.minimum((i + 1) * block_q, s) - 1) // block_k
+            j = jnp.minimum(j, last)
+        return (b, j, 0)
+
+    out_shapes = [jax.ShapeDtypeStruct((bh, sq, d), q.dtype)]
+    out_specs = [pl.BlockSpec((1, block_q, d), q_map)]
+    if return_block_counts:
+        out_shapes.append(jax.ShapeDtypeStruct((bh, n_q), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1), lambda b, i, j, st: (b, i)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, n_q, n_k),
         in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.SMEM((1,), jnp.int32),
         ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          bounded=bounded, count=return_block_counts,
+                          block_q=block_q, block_k=block_k, n_k=n_k,
+                          t_valid=t, s_valid=s),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(qp, kp, vp)
-    return out[:, :s, :]
+    )(start_arr, qp, kp, vp)
+    out = outs[0][:, :s, :]
+    if return_block_counts:
+        return out, outs[1]
+    return out

@@ -222,18 +222,57 @@ def cim_matmul_bit_exact_loop(
     return y
 
 
-def flash_attention_ref(q, k, v, causal: bool = True):
+def flash_attention_ref(q, k, v, causal: bool = True, start=None):
     """Plain softmax attention oracle for the flash kernel.
 
     q: (BH, S, D); k, v: (BH, T, D) -> (BH, S, D), f32 softmax.
+
+    ``start: (BH,)`` gives per-row absolute offsets (``_cached_mask``
+    semantics, prefill against a partially-filled slot cache): query i of
+    row b sits at absolute position start[b]+i and may attend key j iff
+    j <= start[b]+i (causal) and j < start[b]+S (slot validity — recycled
+    slots keep stale keys beyond the row's length).
     """
     import jax
+    sq, tk = q.shape[1], k.shape[1]
     scale = 1.0 / (q.shape[-1] ** 0.5)
     s = jnp.einsum("bsd,btd->bst", q, k).astype(jnp.float32) * scale
-    if causal:
-        sq, tk = s.shape[-2:]
+    kj = jnp.arange(tk)[None, :]
+    if start is not None:
+        if not causal:
+            raise ValueError("start offsets require causal attention")
+        qi = jnp.arange(sq)[None, :, None] + start[:, None, None]  # (BH,S,1)
+        mask = (kj[None] <= qi) & (kj[None] < (start[:, None, None] + sq))
+        s = jnp.where(mask, s, -1e30)
+    elif causal:
         qi = jnp.arange(sq)[:, None]
-        kj = jnp.arange(tk)[None, :]
         s = jnp.where(kj <= qi, s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     return jnp.einsum("bst,btd->bsd", p, v)
+
+
+def decode_attention_ref(q, k, v, lens, ks=None, vs=None):
+    """Ragged single-token GQA decode oracle for the Pallas decode kernel.
+
+    q: (B, H, D); k, v: (B, T, KV, D); lens: (B,) valid-key counts
+    (including the current token's freshly written key). ``ks``/``vs``
+    (B, T, KV, 1) dequantise an int8 cache. Rows with lens == 0 return
+    exactly zero (matching the kernel's empty-accumulator output).
+    """
+    b, h, d = q.shape
+    t, kv_heads = k.shape[1], k.shape[2]
+    g = h // kv_heads
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if ks is not None:
+        kf = kf * ks
+        vf = vf * vs
+    qr = q.reshape(b, kv_heads, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qr, kf) / jnp.sqrt(
+        jnp.float32(d))
+    valid = jnp.arange(t)[None, :] < lens[:, None]             # (B, T)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, vf)
+    out = jnp.where(lens[:, None, None, None] > 0, out, 0.0)
+    return out.reshape(b, h, d).astype(q.dtype)

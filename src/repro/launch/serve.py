@@ -5,7 +5,13 @@ all slots, DESIGN.md §10); ``--engine loop`` runs the frozen per-slot
 reference engine for comparison.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-      --requests 6 --new-tokens 12 [--cim sim] [--engine fused|loop]
+      --requests 6 --new-tokens 12 [--cim sim] [--engine fused|loop] \
+      [--attn-impl kernel]
+
+``--attn-impl kernel`` routes cached GQA attention through the
+length-aware Pallas decode kernel + causal-pruned flash prefill
+(DESIGN.md §11): decode cost scales with each slot's live context, not
+cache capacity. The default einsum path is the bit-stable reference.
 """
 
 from __future__ import annotations
@@ -31,6 +37,14 @@ def main():
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--cim", default="off", choices=["off", "sim"])
     ap.add_argument("--engine", default="fused", choices=["fused", "loop"])
+    ap.add_argument(
+        "--attn-impl", default="config",
+        choices=["config", "einsum", "kernel"],
+        help="cached-GQA attention path: 'kernel' = length-aware Pallas "
+             "decode kernel + causal-pruned flash prefill (O(live-context) "
+             "per decode step, the production TPU path; runs in interpret "
+             "mode on CPU); 'einsum' = dense masked-softmax reference; "
+             "'config' defers to the arch config (default einsum)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -41,7 +55,9 @@ def main():
     engine_cls = Engine if args.engine == "fused" else LoopEngine
     engine = engine_cls(cfg, params, max_slots=args.slots,
                         max_len=args.prompt_len + args.new_tokens + 8,
-                        cim_mode=args.cim)
+                        cim_mode=args.cim,
+                        attn_impl=(None if args.attn_impl == "config"
+                                   else args.attn_impl))
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
                                         dtype=np.int32),

@@ -15,6 +15,16 @@ what lets the serving engine fuse ragged continuous-batching slots into one
 batch-axis decode program (DESIGN.md §10). Writes are per-row
 ``dynamic_update_slice`` (vmapped over batch) and the attention mask combines
 per-row causality with per-row key validity.
+
+GQA cached attention runs one of two implementations, selected by
+``cfg.attn_impl`` (DESIGN.md §11):
+
+  * ``"einsum"`` (default) — dense masked softmax over the whole cache;
+    the reference path, bit-stable across batch shapes.
+  * ``"kernel"`` — decode (S==1) through the length-aware Pallas kernel
+    (``kernels.decode_attention``, O(len[b]) per row instead of
+    O(max_len)); prefill (S>1) through the causal-block-pruned flash
+    kernel with per-row start offsets. Interpret mode off-TPU.
 """
 
 from __future__ import annotations
@@ -27,6 +37,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.layers import Ctx, Params, _init_dense, apply_rope, dense
 from repro.distributed.sharding import shard
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
 
 NEG_INF = -1e30
 
@@ -83,6 +95,34 @@ def _sdpa(q, k, v, mask) -> jnp.ndarray:
     return out.reshape(b, s, h, d)
 
 
+def _sdpa_int8(q, kq, ks, vq, vs, mask) -> jnp.ndarray:
+    """Int8-KV attention without materialising a dequantised cache copy.
+
+    q: (B,S,H,D); kq, vq: (B,T,KV,D) int8; ks, vs: (B,T,KV,1) f32 scales.
+    The per-key scales commute with the head-dim reduction, so they fold
+    into the *logits* (k side) and the *probabilities* (v side) — the
+    einsum reads the int8 cache directly and the only scale-sized
+    intermediates are logit/prob shaped (no (B,T,KV,D) f32 copy of the
+    whole cache per decode step; at max_len=4096 that copy alone is 2x the
+    int8 cache's entire footprint).
+    """
+    b, s, h, d = q.shape
+    kvh = kq.shape[2]
+    g = h // kvh
+    qr = q.reshape(b, s, kvh, g, d)
+    ks_t = ks[..., 0].transpose(0, 2, 1)[:, :, None, None, :]   # (B,KV,1,1,T)
+    vs_t = vs[..., 0].transpose(0, 2, 1)[:, :, None, None, :]
+    logits = jnp.einsum("bskgd,btkd->bkgst", qr, kq.astype(q.dtype))
+    logits = logits.astype(jnp.float32) * ks_t
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1) * vs_t
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(q.dtype),
+                     vq.astype(q.dtype))
+    return out.reshape(b, s, h, d)
+
+
 def _causal_mask(s: int, t: int, offset: int = 0) -> jnp.ndarray:
     """(1, 1, s, t) boolean causal mask; query i attends key j <= i+offset."""
     qi = jnp.arange(s)[:, None] + offset
@@ -97,6 +137,34 @@ def row_update(cache_arr: jnp.ndarray, update: jnp.ndarray,
     return jax.vmap(
         lambda c, u, st: jax.lax.dynamic_update_slice_in_dim(c, u, st, axis=0)
     )(cache_arr, update.astype(cache_arr.dtype), starts)
+
+
+def _pow2_block(n: int, cap: int = 128, lo: int = 8) -> int:
+    """Smallest power-of-two >= n, clipped to [lo, cap] (flash block pick)."""
+    return max(lo, min(cap, 1 << (max(n, 1) - 1).bit_length()))
+
+
+def _flash_prefill(q, k_f, v_f, start) -> jnp.ndarray:
+    """Bucketed prefill through the flash kernel (attn_impl="kernel").
+
+    q: (B,S,H,D); k_f, v_f: (B,T,KV,D) dequantised cache. GQA KV heads are
+    expanded to H (order matches ``_sdpa``'s h = kv*G + g grouping) and
+    (B, H) folds into flash's row axis with per-row ``start`` offsets, so
+    right-padded bucket prefill gets the causal-block-pruned O(s*d + t*d)
+    path instead of materialised (s, t) scores.
+    """
+    b, s, h, d = q.shape
+    t, kvh = k_f.shape[1], k_f.shape[2]
+    g = h // kvh
+    kx = jnp.repeat(k_f, g, axis=2)
+    vx = jnp.repeat(v_f, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = kx.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vf = vx.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    st = jnp.repeat(start.astype(jnp.int32), h)
+    out = flash_attention(qf, kf, vf, causal=True, start=st,
+                          block_q=_pow2_block(s), block_k=_pow2_block(t))
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
 
 
 def _cached_mask(start: jnp.ndarray, s: int, t: int) -> jnp.ndarray:
@@ -138,6 +206,10 @@ def gqa_attention(
     q = shard(q, "batch", "qseq", "heads", "head_dim")
     k = shard(k, "batch", "seq", "kv_heads", "head_dim")
 
+    impl = cfg.attn_impl
+    if impl not in ("einsum", "kernel"):
+        raise ValueError(f"attn_impl must be 'einsum' or 'kernel', "
+                         f"got {impl!r}")
     if cache is None:
         out = _sdpa(q, k, v, _causal_mask(s, s) if causal else None)
         new_cache = None
@@ -152,17 +224,40 @@ def gqa_attention(
             cks = row_update(cache["ks"], ks_, start)
             cvs = row_update(cache["vs"], vs_, start)
             new_cache = {"k": ck, "v": cv, "ks": cks, "vs": cvs, "len": start + s}
-            ck_f = (ck.astype(jnp.float32) * cks).astype(x.dtype)
-            cv_f = (cv.astype(jnp.float32) * cvs).astype(x.dtype)
         else:
             ck = row_update(cache["k"], k, start)
             cv = row_update(cache["v"], v, start)
             new_cache = {"k": ck, "v": cv, "len": start + s}
-            ck_f, cv_f = ck, cv
         t = ck.shape[1]
-        ck_s = shard(ck_f, "batch", "seq", "kv_heads", "head_dim")
-        cv_s = shard(cv_f, "batch", "seq", "kv_heads", "head_dim")
-        out = _sdpa(q, ck_s, cv_s, _cached_mask(start, s, t))
+        ck_s = shard(ck, "batch", "seq", "kv_heads", "head_dim")
+        cv_s = shard(cv, "batch", "seq", "kv_heads", "head_dim")
+        if impl == "kernel" and s == 1:
+            # length-aware Pallas decode: O(len[b]) KV blocks per row, int8
+            # dequantised in-kernel (the cache never round-trips through a
+            # full-precision HBM copy). lens counts the freshly written key.
+            if int8_cache:
+                out = decode_attention(q[:, 0], ck_s, cv_s, start + 1,
+                                       ks=cks, vs=cvs)
+            else:
+                out = decode_attention(q[:, 0], ck_s, cv_s, start + 1)
+            out = out[:, None]
+        elif impl == "kernel":
+            # bucketed prefill via flash (causal block pruning + per-row
+            # start offsets). Prefill touches the whole live prefix anyway,
+            # so the int8 cache is dequantised up front here.
+            if int8_cache:
+                ck_f = (ck_s.astype(jnp.float32) * cks).astype(x.dtype)
+                cv_f = (cv_s.astype(jnp.float32) * cvs).astype(x.dtype)
+            else:
+                ck_f, cv_f = ck_s, cv_s
+            out = _flash_prefill(q, ck_f, cv_f, start)
+        elif int8_cache:
+            # einsum fallback: scales fold into logits/probs — no f32
+            # dequantised copy of the whole (B, T, KV, D) cache per step
+            out = _sdpa_int8(q, ck_s, cks, cv_s, cvs,
+                             _cached_mask(start, s, t))
+        else:
+            out = _sdpa(q, ck_s, cv_s, _cached_mask(start, s, t))
 
     out = out.reshape(b, s, h * hd)
     return dense(ctx, p["o"], out, "attn_out"), new_cache

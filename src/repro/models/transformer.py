@@ -14,6 +14,12 @@ All layer stacks use jax.lax.scan over stacked parameters (compile time is
 O(1) in depth — essential for the 95-layer/512-chip dry-run) with optional
 jax.checkpoint (remat) on the block body. Three phases everywhere:
 train (no cache), prefill (cache fill), decode (1 token vs cache).
+
+Cached GQA attention honors ``cfg.attn_impl`` (DESIGN.md §11): the default
+"einsum" reference, or "kernel" — the length-aware Pallas decode kernel +
+causal-pruned flash prefill, scanned per layer like any other block body
+(the pallas_call lowers inside lax.scan/remat in both compiled and
+interpret modes). Train-phase and cross-attention stay on einsum.
 """
 
 from __future__ import annotations

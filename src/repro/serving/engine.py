@@ -48,6 +48,19 @@ def _pow2_bucket(n: int, lo: int = 8) -> int:
     return b
 
 
+def _check_attn_impl(cfg: ModelConfig, attn_impl: str) -> None:
+    """Only GQA cached attention consults ``attn_impl``; silently running
+    einsum while the caller benchmarks "the kernel" misattributes every
+    number, so reject families with no GQA decode path outright."""
+    if attn_impl == "kernel" and (cfg.family == "ssm" or cfg.mla is not None):
+        what = "attention-free ssm" if cfg.family == "ssm" else "MLA"
+        raise ValueError(
+            f"attn_impl='kernel' has no effect on the {what} family "
+            f"'{cfg.name}' (only cached GQA attention routes through the "
+            "Pallas decode kernel, DESIGN.md §11); refusing to run with a "
+            "misleading setting")
+
+
 def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
                    key: jax.Array) -> jnp.ndarray:
     """(B, V) logits + (B,) temps -> (B,) int32; argmax rows where temp<=0."""
@@ -70,10 +83,18 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
                  max_len: int = 512, cim_mode: Optional[str] = None,
-                 seed: int = 0, drain_every: int = 64):
+                 seed: int = 0, drain_every: int = 64,
+                 attn_impl: Optional[str] = None):
         if cfg.family == "encdec":
             raise ValueError("encdec serving needs per-request encoder "
                              "frames; the token-only engines don't carry them")
+        # attn_impl="kernel" flips the fused decode step (and bucketed
+        # prefill) onto the length-aware Pallas attention path — O(len[b])
+        # per slot instead of O(max_len) (DESIGN.md §11). None defers to
+        # cfg.attn_impl; "einsum" is the dense reference path.
+        if attn_impl is not None:
+            _check_attn_impl(cfg, attn_impl)
+            cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -248,7 +269,10 @@ class LoopEngine:
 
     def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
                  max_len: int = 512, cim_mode: Optional[str] = None,
-                 seed: int = 0):
+                 seed: int = 0, attn_impl: Optional[str] = None):
+        if attn_impl is not None:
+            _check_attn_impl(cfg, attn_impl)
+            cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots

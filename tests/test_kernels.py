@@ -258,3 +258,81 @@ def test_flash_attention_property(s, d, seed):
     y_ref = flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_causal_block_pruning():
+    """k blocks above the causal frontier must be *skipped*, not masked:
+    the per-q-block compute counts must equal ceil((qi_max+1)/block_k) —
+    the ~2x the original kernel docstring left as future work — while the
+    output stays bit-identical to the unpruned oracle path."""
+    bq = bk = 64
+    bh, s, t, d = 2, 256, 256, 64
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, s, d))
+    k = jax.random.normal(kk, (bh, t, d))
+    v = jax.random.normal(kv, (bh, t, d))
+    y, counts = flash_attention(q, k, v, causal=True, block_q=bq,
+                                block_k=bk, interpret=True,
+                                return_block_counts=True)
+    n_q, n_k = s // bq, t // bk
+    expected = np.asarray([[-(-min((i + 1) * bq, s) // bk)
+                            for i in range(n_q)]] * bh)
+    np.testing.assert_array_equal(np.asarray(counts), expected)
+    assert counts.sum() < bh * n_q * n_k          # strictly fewer than dense
+    assert int(counts.sum()) == bh * n_q * (n_q + 1) // 2  # ~half the grid
+    y_ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal_not_pruned():
+    """Cross-attention (non-causal) must still visit every k block."""
+    bh, s, t, d = 2, 64, 192, 64
+    key = jax.random.PRNGKey(5)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, s, d))
+    k = jax.random.normal(kk, (bh, t, d))
+    v = jax.random.normal(kv, (bh, t, d))
+    _, counts = flash_attention(q, k, v, causal=False, block_q=64,
+                                block_k=64, interpret=True,
+                                return_block_counts=True)
+    assert int(np.asarray(counts).sum()) == bh * 1 * (t // 64)
+
+
+@pytest.mark.parametrize("starts", [[0, 7, 20], [0, 0, 0], [54, 1, 33]])
+def test_flash_attention_start_offsets(starts):
+    """Per-row start offsets (slot-cache prefill semantics): query i of
+    row b attends keys j <= start[b]+i and j < start[b]+s, matching the
+    extended oracle — including rows starting mid-cache."""
+    s, t, d = 10, 64, 64
+    key = jax.random.PRNGKey(sum(starts))
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (3, s, d))
+    k = jax.random.normal(kk, (3, t, d))
+    v = jax.random.normal(kv, (3, t, d))
+    st_arr = jnp.asarray(starts, jnp.int32)
+    y = flash_attention(q, k, v, causal=True, start=st_arr, block_q=8,
+                        block_k=8, interpret=True)
+    y_ref = flash_attention_ref(q, k, v, causal=True, start=st_arr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_start_prunes_per_row():
+    """Pruning is per-row dynamic under start offsets: a row starting at 0
+    computes fewer k blocks than a row starting deep in the cache."""
+    s, t, d = 8, 64, 64
+    key = jax.random.PRNGKey(9)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, s, d))
+    k = jax.random.normal(kk, (2, t, d))
+    v = jax.random.normal(kv, (2, t, d))
+    _, counts = flash_attention(q, k, v, causal=True,
+                                start=jnp.asarray([0, 40], jnp.int32),
+                                block_q=8, block_k=8, interpret=True,
+                                return_block_counts=True)
+    counts = np.asarray(counts)
+    assert counts[0, 0] == 1          # rows 0..7 live in block 0 only
+    assert counts[1, 0] == 6          # rows 40..47 need blocks 0..5
+    assert counts[1, 0] > counts[0, 0]

@@ -71,6 +71,38 @@ def test_fused_matches_loop_greedy_ssm():
     assert a == b, (a, b)
 
 
+def test_fused_kernel_impl_matches_einsum_greedy(dense_setup):
+    """attn_impl="kernel" (length-aware Pallas decode + flash bucketed
+    prefill, DESIGN.md §11) must reproduce the einsum path token for token
+    on ragged prompts with slot turnover — greedy, f32 GQA."""
+    cfg, params = dense_setup
+    lens = [3, 11, 6, 17, 4, 9]
+    a = Engine(cfg, params, max_slots=4, max_len=64,
+               attn_impl="kernel").generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(0)))
+    b = Engine(cfg, params, max_slots=4, max_len=64,
+               attn_impl="einsum").generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(0)))
+    assert a == b, (a, b)
+
+
+def test_fused_kernel_impl_matches_einsum_int8():
+    """Same token-for-token equality for the int8-KV cache: the kernel
+    dequantises blocks in-kernel, the einsum path folds scales into
+    logits/probs — greedy argmax must agree within dequant tolerance."""
+    cfg = _tiny_dense_cfg(kv_cache_int8=True, dtype="float32")
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    lens = [3, 9, 5, 12]
+    a = Engine(cfg, params, max_slots=2, max_len=48,
+               attn_impl="kernel").generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(2)))
+    b = Engine(cfg, params, max_slots=2, max_len=48,
+               attn_impl="einsum").generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(2)))
+    assert a == b, (a, b)
+
+
 def test_single_token_budget_honored(dense_setup):
     """max_new_tokens=1 emits exactly 1 token (the frozen LoopEngine
     over-emits a 2nd at this boundary — documented seed quirk)."""
@@ -203,3 +235,14 @@ def test_encdec_rejected():
     cfg = get_config("whisper-medium").reduced()
     with pytest.raises(ValueError, match="encdec"):
         Engine(cfg, params=None, max_slots=1, max_len=8)
+
+
+def test_kernel_attn_impl_rejected_without_gqa_path():
+    """attn_impl='kernel' on families whose cached attention never consults
+    it (ssm, MLA) must error, not silently benchmark the einsum path."""
+    with pytest.raises(ValueError, match="attn_impl"):
+        Engine(get_config("mamba2-130m").reduced(), params=None,
+               max_slots=1, max_len=8, attn_impl="kernel")
+    with pytest.raises(ValueError, match="attn_impl"):
+        Engine(get_config("deepseek-v2-236b").reduced(), params=None,
+               max_slots=1, max_len=8, attn_impl="kernel")
