@@ -24,8 +24,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (attention_bench, fig2_swing, fig4_sac,
-                            fig5_column, fig6_summary, kernel_bench,
+    from benchmarks import (attention_bench, cim_dense_bench, fig2_swing,
+                            fig4_sac, fig5_column, fig6_summary, kernel_bench,
                             roofline_report, serving_bench, vit_accuracy)
 
     benches = {
@@ -35,6 +35,7 @@ def main() -> None:
         "vit_accuracy": vit_accuracy.run,
         "fig4_sac": fig4_sac.run,
         "kernel_bench": kernel_bench.run,
+        "cim_dense_bench": cim_dense_bench.run,
         "serving_bench": serving_bench.run,
         "attention_bench": attention_bench.run,
         "roofline_report": roofline_report.run,
@@ -60,8 +61,22 @@ def main() -> None:
     try:
         import os
         os.makedirs("experiments", exist_ok=True)
-        with open("experiments/bench_results.json", "w") as f:
-            json.dump(results, f, indent=1, default=str)
+        path = "experiments/bench_results.json"
+        # merge into the existing record: a partial --only run must not
+        # clobber every other bench's last results (the old wholesale
+        # overwrite was a known footgun)
+        merged = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    merged = json.load(f)
+                if not isinstance(merged, dict):
+                    merged = {}
+            except ValueError:
+                merged = {}
+        merged.update(results)
+        with open(path, "w") as f:
+            json.dump(merged, f, indent=1, default=str)
     except OSError:
         pass
 

@@ -11,6 +11,14 @@ share prompts (and therefore prefill work) but differ in new-token count:
 
   decode_tok_s = slots * (long - short) / (t_long - t_short)
 
+Since PR 4 the sim rows also record the deploy fast path (DESIGN.md §12):
+``fused_decode_tok_s_sim`` is the engine default (pre-quantized weight
+planes, deployed at construction), ``fused_nodeploy_decode_tok_s_sim``
+re-runs the PR 3 per-call-quantization path on the same machine, and
+``deploy_speedup_sim`` is their machine-independent ratio (the CI
+acceptance floor). ``sim_vs_pr3_x`` compares against the last PR 3 run
+recorded on the reference container (meaningful there, trend-only in CI).
+
 Results append to BENCH_serving.json at the repo root (PR-over-PR record):
 
   PYTHONPATH=src python -m benchmarks.serving_bench
@@ -30,6 +38,11 @@ _BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json"
 SLOTS = 4
 PROMPT_LEN = 16
 SHORT, LONG = 4, 68
+
+# last sim-mode fused run recorded before the PR 4 deploy fast path landed
+# (BENCH_serving.json, 2026-08-01T14:44 on the 2-core reference container);
+# the PR 4 acceptance is >= 2x this on the same container.
+PR3_SIM_BASELINE_TOK_S = 474.5
 
 
 def _setup():
@@ -63,9 +76,10 @@ def _timed_generate(engine, cfg, new_tokens: int) -> float:
     return dt
 
 
-def _decode_tok_s(engine_cls, cfg, params, mode: str) -> float:
+def _decode_tok_s(engine_cls, cfg, params, mode: str, **engine_kw) -> float:
     engine = engine_cls(cfg, params, max_slots=SLOTS,
-                        max_len=PROMPT_LEN + LONG + 8, cim_mode=mode)
+                        max_len=PROMPT_LEN + LONG + 8, cim_mode=mode,
+                        **engine_kw)
     _timed_generate(engine, cfg, SHORT)          # compile prefill + decode
     t_short = min(_timed_generate(engine, cfg, SHORT) for _ in range(2))
     t_long = min(_timed_generate(engine, cfg, LONG) for _ in range(2))
@@ -84,6 +98,12 @@ def run() -> dict:
         out[f"fused_decode_tok_s_{mode}"] = fused
         out[f"loop_decode_tok_s_{mode}"] = loop
         out[f"speedup_{mode}"] = fused / loop
+    # before/after for the PR 4 deploy fast path: same machine, same shapes,
+    # deploy=False is exactly the PR 3 per-call-quantization engine
+    nodeploy = _decode_tok_s(Engine, cfg, params, "sim", deploy=False)
+    out["fused_nodeploy_decode_tok_s_sim"] = nodeploy
+    out["deploy_speedup_sim"] = out["fused_decode_tok_s_sim"] / nodeploy
+    out["sim_vs_pr3_x"] = out["fused_decode_tok_s_sim"] / PR3_SIM_BASELINE_TOK_S
     from benchmarks.common import append_run
     append_run(_BENCH_JSON, out)
     return out

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core import energy
+from repro.core.deploy import deploy, plane_summary
 from repro.core.sac import ROLE_CLASS, get_policy
 from repro.models.model import build
 from repro.serving.engine import Engine, Request
@@ -43,8 +44,19 @@ def main():
     api = build(cfg)
     params, _ = api.init(jax.random.PRNGKey(0))
 
+    # deploy: pre-quantize every CIM-routed weight once per SAC policy —
+    # the macro's weight-stationary contract (weights are programmed into
+    # the array once; only activations quantize per token). Bit-identical
+    # to on-the-fly quantization, and the sim-mode serving fast path.
+    # (Engine(cim_mode="sim") does this automatically; shown explicitly.)
+    params = deploy(cfg, params)
+    ps = plane_summary(params)
+    print(f"deployed {ps['planes']} weight planes "
+          f"({ps['int8_bytes'] / 2**20:.2f} MiB int8)")
+
     # fused slot-batched engine: one jitted decode step advances both slots
-    engine = Engine(cfg, params, max_slots=2, max_len=64, cim_mode="sim")
+    engine = Engine(cfg, params, max_slots=2, max_len=64, cim_mode="sim",
+                    deploy=False)  # params already deployed above
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
                     max_new_tokens=args.new_tokens)

@@ -19,7 +19,10 @@ class CIMModelConfig:
     policy: str = "paper_sac"    # SAC policy name (core/sac.py)
     act_clip_sigmas: float = 4.0  # activation scale = clip at k*rms (per-layer
                                   # Vref fit; abs-max if <= 0)
-    use_kernel: bool = False      # route sim-mode matmuls through Pallas
+    use_kernel: bool = False      # route deployed sim-mode matmuls through
+                                  # the fused-act-quant Pallas path
+                                  # (ops.cim_matmul_deployed, DESIGN.md §12);
+                                  # default jnp behavioural path on CPU
 
 
 @dataclasses.dataclass(frozen=True)

@@ -228,12 +228,26 @@ def output_noise_std_int_per_tile(
 def cim_matmul_behavioral(
     xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec: CIMSpec
 ) -> jnp.ndarray:
-    """Behavioural macro matmul: exact int dot + equivalent Gaussian error."""
+    """Behavioural macro matmul: exact int dot + equivalent Gaussian error.
+
+    When every partial sum fits below 2^24 (qmax_x * qmax_w * K — true for
+    all SAC operating points at model shapes) the dot runs in f32: bit-exact
+    (f32 addition of integers under 2^24 is exact in any order) and far
+    faster than an int32 dot, which XLA:CPU lowers as scalar loops off the
+    BLAS-style fast path.
+    """
     k = xq.shape[-1]
-    y = jnp.einsum(
-        "...k,kn->...n", xq.astype(jnp.int32), wq.astype(jnp.int32),
-        preferred_element_type=jnp.int32,
-    ).astype(jnp.float32)
+    if quant.qmax(spec.in_bits) * quant.qmax(spec.w_bits) * k < 2 ** 24:
+        # HIGHEST pins true-f32 MXU passes on TPU — the default precision
+        # would truncate operands to bf16 and break exactness for qmax > 256
+        y = jnp.einsum("...k,kn->...n", xq.astype(jnp.float32),
+                       wq.astype(jnp.float32),
+                       precision=jax.lax.Precision.HIGHEST)
+    else:
+        y = jnp.einsum(
+            "...k,kn->...n", xq.astype(jnp.int32), wq.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
     sigma = output_noise_std_int(spec, k)
     if sigma > 0.0:
         y = y + sigma * jax.random.normal(key, y.shape, jnp.float32)
@@ -247,12 +261,13 @@ def cim_matmul_behavioral(
 
 def cim_dense(
     x: jnp.ndarray,
-    w: jnp.ndarray,
+    w: Optional[jnp.ndarray],
     spec: Optional[CIMSpec],
     key: Optional[jax.Array],
     mode: str = "digital",
     x_scale: Optional[jnp.ndarray] = None,
     w_scale: Optional[jnp.ndarray] = None,
+    wq: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """y = x @ w executed digitally, as QAT fake-quant, or on the CIM model.
 
@@ -262,17 +277,22 @@ def cim_dense(
                         (+ optional noise if key given): the software half of
                         the co-design, used for training.
       * ``sim``       — behavioural macro execution (used at serving time).
+                        With a pre-quantized weight plane (``wq`` int8 +
+                        ``w_scale`` from ``core.deploy``) the per-call weight
+                        abs-max/quantize passes are skipped — the deployed
+                        inference fast path, bit-identical to on-the-fly.
 
-    ``x``: (..., K) float; ``w``: (K, N) float.
+    ``x``: (..., K) float; ``w``: (K, N) float (may be None when ``wq`` is
+    given in sim mode — the array the macro holds resident).
     """
     if mode == "digital" or spec is None:
         return jnp.einsum("...k,kn->...n", x, w)
 
     dtype = x.dtype
-    xs = x_scale if x_scale is not None else quant.abs_max_scale(x, spec.in_bits)
-    ws = w_scale if w_scale is not None else quant.abs_max_scale(w, spec.w_bits)
 
     if mode == "qat":
+        xs = x_scale if x_scale is not None else quant.abs_max_scale(x, spec.in_bits)
+        ws = w_scale if w_scale is not None else quant.abs_max_scale(w, spec.w_bits)
         xf = quant.fake_quant(x.astype(jnp.float32), xs, spec.in_bits)
         wf = quant.fake_quant(w.astype(jnp.float32), ws, spec.w_bits)
         y = jnp.einsum("...k,kn->...n", xf, wf)
@@ -284,11 +304,12 @@ def cim_dense(
         return y.astype(dtype)
 
     if mode == "sim":
-        xq = quant.quantize(x.astype(jnp.float32), xs, spec.in_bits)
-        wq = quant.quantize(w.astype(jnp.float32), ws, spec.w_bits)
+        xq, xs, wq_i, ws = quant.quantize_operands(
+            x, w, spec.in_bits, spec.w_bits,
+            x_scale=x_scale, w_scale=w_scale, wq=wq)
         if key is None:
             key = jax.random.PRNGKey(0)
-        y = cim_matmul_behavioral(xq, wq, key, spec)
+        y = cim_matmul_behavioral(xq, wq_i, key, spec)
         return (y * xs * ws).astype(dtype)
 
     raise ValueError(f"unknown cim mode: {mode}")

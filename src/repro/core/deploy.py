@@ -1,0 +1,155 @@
+"""Deploy pass: pre-quantize every CIM-routed weight once per SAC policy.
+
+The paper's macro is *weight-stationary*: weights are programmed into the
+capacitor array once per deployed layer and stay resident while activations
+stream through. The seed software model instead re-derived each weight's
+abs-max scale and re-ran round/clip on every forward call of every token —
+unfaithful to the hardware and the dominant per-token cost of sim-mode
+serving (the weight is orders of magnitude larger than a decode activation).
+
+``deploy(cfg, params)`` walks the model's parameter pytree exactly once and
+attaches to every CIM-routed dense parameter dict a *weight plane* whose key
+carries the deployed bit-width as a static fingerprint:
+
+    {"w": f32 (..., K, N), ...}  ->  {..., "wq<bits>": int8, "ws<bits>": (...)}
+
+``layers.dense`` looks the plane up at the *serving* spec's ``w_bits``
+(``p["wq6"]`` for the MLP class under ``paper_sac``), so planes deployed
+under a different policy can never be consumed silently at the wrong
+bit-width — the lookup misses and the call falls back to on-the-fly
+quantization (or raises, when ``Ctx.deployed`` asserts planes exist).
+
+* the quantization is **bit-identical** to what the on-the-fly path computed
+  per call (same abs-max -> scale -> round -> clip chain, applied per layer
+  slice of the stacked tree), so deployed and undeployed forwards produce
+  the same arrays bit for bit (tested in tests/test_deploy.py);
+* the role (and hence the SAC operating point: attention 4b vs MLP 6b under
+  ``paper_sac``) is derived from the parameter's tree path, mirroring the
+  role each call site passes to ``layers.dense``;
+* digital roles (router, lm head) and non-matmul params (norms, embeddings,
+  conv) are left untouched — ``layers.dense`` keeps reading ``p["w"]`` for
+  them;
+* the f32 ``w`` stays in the tree (QAT, the STE backward, and MLA's absorbed
+  decode still read it); the serving win is that the hot matmul path reads
+  the int8 plane — 4x less weight HBM traffic than streaming f32 — and runs
+  zero weight-side quantization work per call.
+
+MoE expert banks (raw ``(E, d_in, d_out)`` tensors, not dense dicts) get
+sibling ``<name>_q`` / ``<name>_s`` planes with the per-tensor scale
+``moe._expert_dense`` uses.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.core.sac import Policy, get_policy
+
+# parameter-dict key -> SAC role, mirroring the call sites in
+# models/{attention,layers,moe,ssm,vit}.py. q/k/v/o resolve against the
+# parent dict ("cross" -> cross-attention roles).
+_KEY_ROLE = {
+    "q": "attn_qkv", "k": "attn_qkv", "v": "attn_qkv", "o": "attn_out",
+    "dq": "attn_qkv", "uq": "attn_qkv", "dkv": "attn_qkv",
+    "uk": "attn_qkv", "uv": "attn_qkv",
+    "gate": "mlp_in", "up": "mlp_in", "down": "mlp_out",
+    "patch": "mlp_in",
+    "in_proj": "ssm_in", "out_proj": "ssm_out",
+    "router": "router", "head": "head",
+}
+_EXPERT_BANKS = ("w_gate", "w_up", "w_down")
+
+
+def _role_for(name: str, parent: Optional[str]) -> Optional[str]:
+    role = _KEY_ROLE.get(name)
+    if parent == "cross" and role in ("attn_qkv", "attn_out"):
+        return "cross_qkv" if role == "attn_qkv" else "cross_out"
+    return role
+
+
+def quantize_plane(w: jnp.ndarray, bits: int, reduce_axes: int):
+    """Batched abs-max symmetric quantization over the trailing axes.
+
+    Calls the *same* ``quant.abs_max_scale`` / ``quant.quantize`` chain the
+    on-the-fly path runs, with the trailing ``reduce_axes`` axes reduced per
+    leading slice — so a stacked-layers weight quantizes exactly as each
+    layer's per-call quantization did (max/abs/round/clip are
+    order-independent, and the scale keeps ``w``'s dtype: bf16 configs
+    compute a bf16 scale on the fly and the dequant product must see the
+    same value).
+    """
+    axes = tuple(range(w.ndim - reduce_axes, w.ndim))
+    ws = quant.abs_max_scale(w, bits, axis=axes)         # keepdims per slice
+    wq = quant.quantize(w.astype(jnp.float32), ws,
+                        bits).astype(quant.storage_dtype(bits))
+    return wq, ws.reshape(w.shape[:w.ndim - reduce_axes])
+
+
+def deploy(cfg: ModelConfig, params: Any,
+           policy: Optional[Policy] = None) -> Any:
+    """Return a new params tree with pre-quantized weight planes attached.
+
+    ``policy`` defaults to the config's SAC policy — the one sim-mode
+    serving resolves roles against; deploying under a different policy than
+    the serving context would silently mix bit-widths, so engines always
+    pass their own config here.
+    """
+    if policy is None:
+        policy = get_policy(cfg.cim.policy)
+    if policy is None:
+        return params
+    dtype = jnp.dtype(cfg.dtype)
+
+    def walk(node, name, parent):
+        if not isinstance(node, dict):
+            return node
+        if "w" in node and not isinstance(node["w"], dict):
+            role = _role_for(name, parent)
+            spec = policy.spec_for_role(role) if role is not None else None
+            if spec is None:
+                return dict(node)
+            # mirror layers.dense's cast chain: the on-the-fly path scales
+            # w after .astype(x.dtype) (== cfg dtype), so quantize that view
+            wq, ws = quantize_plane(node["w"].astype(dtype), spec.w_bits,
+                                    reduce_axes=2)
+            return dict(node, **{f"wq{spec.w_bits}": wq,
+                                 f"ws{spec.w_bits}": ws})
+        out = {k: walk(v, k, name) for k, v in node.items()}
+        if any(b in node for b in _EXPERT_BANKS):
+            spec = policy.spec_for_role("moe_expert")
+            if spec is not None:
+                for b in _EXPERT_BANKS:
+                    if b in node:
+                        # _expert_dense quantizes the whole (E, din, dout)
+                        # bank with one per-tensor scale (f32, no dtype cast)
+                        wq, ws = quantize_plane(
+                            node[b].astype(jnp.float32), spec.w_bits,
+                            reduce_axes=3)
+                        out[f"{b}_q{spec.w_bits}"] = wq
+                        out[f"{b}_s{spec.w_bits}"] = ws
+        return out
+
+    return walk(params, None, None)
+
+
+_PLANE_KEY = re.compile(r"(^wq|_q)\d+$")
+
+
+def plane_summary(params: Any) -> dict:
+    """Count deployed planes and their int8 vs f32 footprint (bytes)."""
+    n = 0
+    int8_bytes = 0
+    f32_bytes = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = getattr(path[-1], "key", None)
+        if isinstance(key, str) and _PLANE_KEY.search(key):
+            n += 1
+            int8_bytes += leaf.size * leaf.dtype.itemsize
+            f32_bytes += leaf.size * 4
+    return {"planes": n, "int8_bytes": int8_bytes, "f32_bytes": f32_bytes}

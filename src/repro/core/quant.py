@@ -20,6 +20,16 @@ def qmax(bits: int) -> int:
     return 2 ** (bits - 1) - 1
 
 
+def storage_dtype(bits: int):
+    """Narrowest signed integer dtype that holds quantized ``bits`` values.
+
+    int8 silently wraps above 8 bits (255 -> -1), so every place that
+    narrows a quantized tensor for storage (deploy planes, STE residuals)
+    must pick the dtype from the bit-width, not assume int8.
+    """
+    return jnp.int8 if bits <= 8 else jnp.int16
+
+
 def abs_max_scale(x: jnp.ndarray, bits: int, axis=None, eps: float = 1e-8) -> jnp.ndarray:
     """Symmetric scale so that max|x| maps to qmax(bits)."""
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
@@ -35,6 +45,28 @@ def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
 
 def dequantize(xi: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return xi.astype(jnp.float32) * scale
+
+
+def quantize_operands(x, w, in_bits: int, w_bits: int,
+                      x_scale=None, w_scale=None, wq=None):
+    """Quantize-both-operands preamble shared by every CIM matmul path.
+
+    Returns ``(xq, xs, wq, ws)`` with ``xq``/``wq`` int32 in symmetric range.
+    Scales derive from the operands *as given* (caller's dtype — matching the
+    historical per-path behaviour bit for bit); rounding happens in f32.
+
+    With a pre-quantized weight plane (``wq`` int8 + ``w_scale``, from
+    ``core.deploy``) the weight-side abs-max reduce and round/clip are
+    skipped entirely and ``w`` is never read — the inference fast path.
+    """
+    xs = x_scale if x_scale is not None else abs_max_scale(x, in_bits)
+    xq = quantize(x.astype(jnp.float32), xs, in_bits)
+    if wq is not None:
+        if w_scale is None:
+            raise ValueError("pre-quantized wq requires its w_scale")
+        return xq, xs, wq.astype(jnp.int32), w_scale
+    ws = w_scale if w_scale is not None else abs_max_scale(w, w_bits)
+    return xq, xs, quantize(w.astype(jnp.float32), ws, w_bits), ws
 
 
 @jax.custom_vjp

@@ -132,6 +132,29 @@ def quantize_ref(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
     return jnp.clip(jnp.round(x / scale), -q, q).astype(jnp.int8)
 
 
+def cim_matmul_fused_ref(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    x_scale: jnp.ndarray | float,
+    seed: jnp.ndarray | int | None,
+    sigma: float,
+    macro_rows: int = 1024,
+    scale: jnp.ndarray | float | None = None,
+    in_bits: int = 6,
+) -> jnp.ndarray:
+    """Bit-exact oracle for ``cim_matmul_fused_pallas`` (fused act quant).
+
+    The kernel's prologue quantization is the same elementwise
+    round/clip chain applied here up front (``quantize_ref`` against the
+    scalar ``x_scale``), so fused-kernel == quantize-then-``prng_ref`` holds
+    value for value; the noise contract is unchanged (global (row, col)
+    counters — blocking-invariant).
+    """
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(())
+    xq = quantize_ref(x.astype(jnp.float32), xs, in_bits).astype(jnp.int32)
+    return cim_matmul_prng_ref(xq, wq, seed, sigma, macro_rows, scale)
+
+
 # ---------------------------------------------------------------------------
 # SAR references
 # ---------------------------------------------------------------------------

@@ -12,6 +12,11 @@ reference engine for comparison.
 length-aware Pallas decode kernel + causal-pruned flash prefill
 (DESIGN.md §11): decode cost scales with each slot's live context, not
 cache capacity. The default einsum path is the bit-stable reference.
+
+``--cim sim`` auto-deploys pre-quantized weight planes at engine
+construction (core.deploy, DESIGN.md §12) — the macro's weight-stationary
+contract: weights quantize once per engine, not once per token per layer.
+``--deploy off`` serves the PR 3 per-call-quantization path for comparison.
 """
 
 from __future__ import annotations
@@ -38,6 +43,11 @@ def main():
     ap.add_argument("--cim", default="off", choices=["off", "sim"])
     ap.add_argument("--engine", default="fused", choices=["fused", "loop"])
     ap.add_argument(
+        "--deploy", default="auto", choices=["auto", "on", "off"],
+        help="pre-quantize CIM-routed weights once at engine construction "
+             "(sim-mode inference fast path, DESIGN.md §12); 'auto' deploys "
+             "whenever --cim sim")
+    ap.add_argument(
         "--attn-impl", default="config",
         choices=["config", "einsum", "kernel"],
         help="cached-GQA attention path: 'kernel' = length-aware Pallas "
@@ -57,7 +67,15 @@ def main():
                         max_len=args.prompt_len + args.new_tokens + 8,
                         cim_mode=args.cim,
                         attn_impl=(None if args.attn_impl == "config"
-                                   else args.attn_impl))
+                                   else args.attn_impl),
+                        deploy={"auto": None, "on": True,
+                                "off": False}[args.deploy])
+    if engine.deployed:
+        from repro.core.deploy import plane_summary
+        ps = plane_summary(engine.params)
+        print(f"deployed {ps['planes']} pre-quantized weight planes "
+              f"({ps['int8_bytes'] / 2**20:.1f} MiB int8 vs "
+              f"{ps['f32_bytes'] / 2**20:.1f} MiB f32 streamed per call)")
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
                                         dtype=np.int32),

@@ -27,20 +27,29 @@ Params = Dict[str, Any]
 
 @dataclasses.dataclass
 class Ctx:
-    """Per-apply execution context: CIM mode, SAC policy, RNG stream."""
+    """Per-apply execution context: CIM mode, SAC policy, RNG stream.
+
+    ``deployed`` asserts the params tree carries pre-quantized weight planes
+    (``core.deploy.deploy``): sim-mode ``dense`` then *requires* a plane for
+    every CIM-routed role instead of silently falling back to per-call
+    weight quantization — a missing plane is a deploy/policy mismatch, not a
+    slow path.
+    """
 
     cfg: ModelConfig
     mode: str = "off"                 # off | qat | sim
     policy: Optional[Policy] = None
     key: Optional[jax.Array] = None
     counter: int = 0
+    deployed: bool = False
 
     @classmethod
     def make(cls, cfg: ModelConfig, key: Optional[jax.Array] = None,
-             mode: Optional[str] = None) -> "Ctx":
+             mode: Optional[str] = None, deployed: bool = False) -> "Ctx":
         mode = cfg.cim.mode if mode is None else mode
         policy = get_policy(cfg.cim.policy) if mode != "off" else None
-        return cls(cfg=cfg, mode=mode, policy=policy, key=key)
+        return cls(cfg=cfg, mode=mode, policy=policy, key=key,
+                   deployed=deployed)
 
     def next_key(self) -> Optional[jax.Array]:
         if self.key is None:
@@ -66,15 +75,42 @@ def _init_dense(key, d_in: int, d_out: int, axes: Tuple[str, str],
 
 
 def dense(ctx: Ctx, p: Params, x: jnp.ndarray, role: str) -> jnp.ndarray:
-    """y = x @ w (+ b), executed per the CIM context and SAC role."""
-    w = p["w"].astype(x.dtype)
+    """y = x @ w (+ b), executed per the CIM context and SAC role.
+
+    Sim mode with a deployed weight plane (``p["wq"]``/``p["ws"]``, see
+    ``core.deploy``) skips the per-call weight abs-max/quantize entirely —
+    only the activation side is quantized per call; the result is
+    bit-identical to the on-the-fly path. ``cfg.cim.use_kernel`` further
+    routes the deployed matmul through the fused-activation-quant Pallas
+    path (``kernels.ops.cim_matmul_deployed`` — in-kernel xq, int8 weight
+    stream, threefry readout noise) instead of the jnp behavioural model.
+    """
     spec = ctx.spec_for(role)
     if spec is None:
-        y = jnp.einsum("...k,kn->...n", x, w)
+        y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
     else:
         k = ctx.next_key()
         xs = _act_scale(ctx, x, spec)
-        y = cim_dense(x, w, spec, k, mode=ctx.mode, x_scale=xs)
+        # the plane key carries the deployed w_bits, so a tree deployed
+        # under a different policy can never be consumed at the wrong
+        # bit-width — the lookup just misses
+        wq = p.get(f"wq{spec.w_bits}") if ctx.mode == "sim" else None
+        if ctx.deployed and ctx.mode == "sim" and wq is None:
+            raise ValueError(
+                f"deployed sim-mode dense has no pre-quantized weight plane "
+                f"for role '{role}' at w_bits={spec.w_bits} — run "
+                "core.deploy.deploy() with the same SAC policy the serving "
+                "context resolves")
+        if wq is not None and ctx.cfg.cim.use_kernel:
+            from repro.kernels import ops as kops
+            y = kops.cim_matmul_deployed(x, wq, p[f"ws{spec.w_bits}"], spec,
+                                         k, x_scale=xs).astype(x.dtype)
+        elif wq is not None:
+            y = cim_dense(x, None, spec, k, mode="sim", x_scale=xs,
+                          w_scale=p[f"ws{spec.w_bits}"], wq=wq)
+        else:
+            y = cim_dense(x, p["w"].astype(x.dtype), spec, k, mode=ctx.mode,
+                          x_scale=xs)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y

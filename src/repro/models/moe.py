@@ -152,11 +152,11 @@ def moe_block(ctx: Ctx, p: Params, x: jnp.ndarray) -> jnp.ndarray:
 
     # expert FFN (SwiGLU), batched einsum; experts sharded over 'model' (EP)
     def ffn(ex_in):
-        g = _expert_dense(ctx, ex_in, p["w_gate"])
-        u = _expert_dense(ctx, ex_in, p["w_up"])
+        g = _expert_dense(ctx, ex_in, p, "w_gate")
+        u = _expert_dense(ctx, ex_in, p, "w_up")
         h = jax.nn.silu(g) * u
         h = shard(h, "batch", "experts", None, "mlp")
-        return _expert_dense(ctx, h, p["w_down"])
+        return _expert_dense(ctx, h, p, "w_down")
 
     out = ffn(ex)
 
@@ -232,8 +232,16 @@ def _smap_combine(mesh, dp_ax, dtype, out, e_idx, pos_idx, keep, gates,
     )(out, e_idx, pos_idx, keep, gates)
 
 
-def _expert_dense(ctx: Ctx, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-    """(G, E, C, a) x (E, a, b) -> (G, E, C, b) through the CIM model."""
+def _expert_dense(ctx: Ctx, x: jnp.ndarray, p: Params,
+                  name: str) -> jnp.ndarray:
+    """(G, E, C, a) x (E, a, b) -> (G, E, C, b) through the CIM model.
+
+    ``p[name]`` is the expert bank; a deployed per-tensor plane
+    ``p[f"{name}_q{w_bits}"]``/``_s{w_bits}`` (``core.deploy`` — the key
+    fingerprints the deployed bit-width) lets sim mode skip the whole-bank
+    abs-max/quantize per call, bit-identically.
+    """
+    w = p[name]
     spec = ctx.spec_for("moe_expert")
     if spec is None:
         return jnp.einsum("geca,eab->gecb", x, w.astype(x.dtype))
@@ -242,17 +250,25 @@ def _expert_dense(ctx: Ctx, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     from repro.core import quant
     from repro.core.cim import output_noise_std_int
 
-    xs = quant.abs_max_scale(x.astype(jnp.float32), spec.in_bits)
-    ws = quant.abs_max_scale(w.astype(jnp.float32), spec.w_bits)
     if ctx.mode == "qat":
+        xs = quant.abs_max_scale(x.astype(jnp.float32), spec.in_bits)
+        ws = quant.abs_max_scale(w.astype(jnp.float32), spec.w_bits)
         xf = quant.fake_quant(x.astype(jnp.float32), xs, spec.in_bits)
         wf = quant.fake_quant(w.astype(jnp.float32), ws, spec.w_bits)
         y = jnp.einsum("geca,eab->gecb", xf, wf)
     else:
-        xq = quant.quantize(x.astype(jnp.float32), xs, spec.in_bits)
-        wq = quant.quantize(w.astype(jnp.float32), ws, spec.w_bits)
+        wq = p.get(f"{name}_q{spec.w_bits}")
+        ws = p.get(f"{name}_s{spec.w_bits}")
+        if ctx.deployed and wq is None:
+            raise ValueError(
+                "deployed sim-mode expert FFN has no pre-quantized weight "
+                f"plane for '{name}' at w_bits={spec.w_bits} — run "
+                "core.deploy.deploy() with the serving policy")
+        xq, xs, wq_i, ws = quant.quantize_operands(
+            x.astype(jnp.float32), None if wq is not None else w.astype(jnp.float32),
+            spec.in_bits, spec.w_bits, w_scale=ws, wq=wq)
         y = jnp.einsum("geca,eab->gecb", xq.astype(jnp.float32),
-                       wq.astype(jnp.float32))
+                       wq_i.astype(jnp.float32))
         y = y * xs * ws
     key = ctx.next_key()
     if key is not None:

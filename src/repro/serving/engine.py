@@ -61,6 +61,25 @@ def _check_attn_impl(cfg: ModelConfig, attn_impl: str) -> None:
             "misleading setting")
 
 
+def _resolve_deploy(deploy: Optional[bool], mode: str) -> bool:
+    """None -> auto (deploy for sim-mode serving); True requires sim."""
+    if deploy is None:
+        return mode == "sim"
+    if deploy and mode != "sim":
+        raise ValueError(
+            f"deploy=True only affects cim_mode='sim' (got mode '{mode}'): "
+            "pre-quantized weight planes are the sim-mode inference fast "
+            "path; off/qat would silently ignore them")
+    return bool(deploy)
+
+
+def _maybe_deploy(cfg: ModelConfig, params: Any, deployed: bool) -> Any:
+    if not deployed:
+        return params
+    from repro.core.deploy import deploy as deploy_params
+    return deploy_params(cfg, params)
+
+
 def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
                    key: jax.Array) -> jnp.ndarray:
     """(B, V) logits + (B,) temps -> (B,) int32; argmax rows where temp<=0."""
@@ -84,7 +103,8 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
                  max_len: int = 512, cim_mode: Optional[str] = None,
                  seed: int = 0, drain_every: int = 64,
-                 attn_impl: Optional[str] = None):
+                 attn_impl: Optional[str] = None,
+                 deploy: Optional[bool] = None):
         if cfg.family == "encdec":
             raise ValueError("encdec serving needs per-request encoder "
                              "frames; the token-only engines don't carry them")
@@ -96,23 +116,30 @@ class Engine:
             _check_attn_impl(cfg, attn_impl)
             cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
         self.cfg = cfg
-        self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.drain_every = drain_every
         self.key = jax.random.PRNGKey(seed)
         self._bucketed = cfg.family in self._BUCKETED_FAMILIES
         mode = cim_mode if cim_mode is not None else cfg.cim.mode
+        # deploy=None auto-deploys pre-quantized weight planes for sim-mode
+        # serving (core.deploy, DESIGN.md §12): weights are programmed once
+        # per engine like the macro's weight-stationary array, instead of
+        # re-quantized per token per layer. Bit-identical outputs; greedy
+        # tokens are unchanged (tested). deploy=False serves the PR 3 path.
+        self.deployed = _resolve_deploy(deploy, mode)
+        self.params = _maybe_deploy(cfg, params, self.deployed)
 
         # allocated once; recycled for the lifetime of the engine
         self.caches = tf.init_caches(cfg, max_slots, max_len)
         self.last_tok = jnp.zeros((max_slots,), jnp.int32)
+        deployed = self.deployed
 
         def prefill_fn(params, caches, last_tok, tokens, true_len, slot,
                        temp, key):
             """Prefill one request into its slot of the stacked cache."""
             kctx, ksamp = jax.random.split(key)
-            ctx = Ctx.make(cfg, kctx, mode=mode)
+            ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed)
             # full zero reset, not just len: a 1-token prompt hits the SSM
             # *decode* branch, which reads conv/state — stale recurrent state
             # from the slot's previous occupant must not leak in
@@ -131,7 +158,7 @@ class Engine:
         def decode_fn(params, caches, last_tok, active, temps, key):
             """One fused step: every active slot emits its next token."""
             kctx, ksamp = jax.random.split(key)
-            ctx = Ctx.make(cfg, kctx, mode=mode)
+            ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed)
             logits, new_caches = tf.forward(
                 params, {"tokens": last_tok[:, None]}, cfg, ctx, caches)
             toks = _sample_tokens(logits[:, -1], temps, ksamp)
@@ -269,24 +296,27 @@ class LoopEngine:
 
     def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
                  max_len: int = 512, cim_mode: Optional[str] = None,
-                 seed: int = 0, attn_impl: Optional[str] = None):
+                 seed: int = 0, attn_impl: Optional[str] = None,
+                 deploy: Optional[bool] = None):
         if attn_impl is not None:
             _check_attn_impl(cfg, attn_impl)
             cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
         self.cfg = cfg
-        self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         mode = cim_mode if cim_mode is not None else cfg.cim.mode
+        self.deployed = _resolve_deploy(deploy, mode)
+        self.params = _maybe_deploy(cfg, params, self.deployed)
+        deployed = self.deployed
 
         def prefill_fn(params, batch, caches, key):
-            ctx = Ctx.make(cfg, key, mode=mode)
+            ctx = Ctx.make(cfg, key, mode=mode, deployed=deployed)
             logits, caches = tf.forward(params, batch, cfg, ctx, caches)
             return logits[:, -1], caches
 
         def decode_fn(params, tokens, caches, key):
-            ctx = Ctx.make(cfg, key, mode=mode)
+            ctx = Ctx.make(cfg, key, mode=mode, deployed=deployed)
             logits, caches = tf.forward(params, {"tokens": tokens}, cfg, ctx, caches)
             return logits[:, -1], caches
 

@@ -93,6 +93,96 @@ def test_kernel_noise_invariant_to_block_shape():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_decode_shaped_auto_tile_bit_identical():
+    """Skinny decode tiles (bm=None auto-picks the next multiple of 8 for
+    M <= 8 instead of a 256-row pad) must equal the bm=256 output bit for
+    bit — threefry invariance extends to the serving decode shape."""
+    for m in (1, 4, 8):
+        xq, wq = _rand_operands(m, 2048, 96, seed=m)
+        auto = cim_matmul_pallas(xq, wq, seed=11, sigma=2.0, interpret=True)
+        padded = cim_matmul_pallas(xq, wq, seed=11, sigma=2.0, bm=256,
+                                   bn=256, interpret=True)
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(padded))
+
+
+def test_modeled_decode_tile_cost_ratio():
+    """The decode-shaped launch must model >= 4x fewer FLOPs + HBM bytes
+    than the padded bm=256 launch (the BENCH_kernels acceptance). The model
+    carries the compiled-TPU 32-sublane int8 floor, so the ratio describes
+    a launch the hardware actually runs."""
+    from repro.kernels.cim_matmul import modeled_cost
+
+    pad = modeled_cost(4, 2048, 512, bm=256, bn=256)
+    skinny = modeled_cost(4, 2048, 512)
+    assert skinny["bm"] == 32
+    ratio = (pad["flops"] + pad["hbm_bytes"]) / (
+        skinny["flops"] + skinny["hbm_bytes"])
+    assert ratio >= 4.0, ratio
+    assert pad["flops"] / skinny["flops"] == 8.0
+
+
+# ------------------------------------------------- fused activation quant
+
+
+def test_fused_act_quant_kernel_matches_oracle():
+    """cim_matmul_fused_pallas (in-prologue activation quantization) must
+    match the quantize-then-prng jnp oracle."""
+    from repro.kernels.cim_matmul import cim_matmul_fused_pallas
+
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (6, 1536))
+    _, wq = _rand_operands(6, 1536, 80, seed=4)
+    xs = quant.abs_max_scale(x, 6)
+    y_k = cim_matmul_fused_pallas(x, wq, xs, seed=21, sigma=1.5, in_bits=6,
+                                  scale=0.01, interpret=True)
+    y_r = ref.cim_matmul_fused_ref(x, wq, xs, 21, 1.5, 1024, 0.01, 6)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=5e-6, atol=2e-5)
+
+
+def test_fused_act_quant_equals_separate_quant_pass():
+    """Fusing the activation quant into the prologue must be bit-identical
+    to quantizing first and running the int kernel — the fusion removes an
+    HBM round-trip, never a bit."""
+    from repro.kernels.cim_matmul import cim_matmul_fused_pallas
+
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (4, 2048))
+    _, wq = _rand_operands(4, 2048, 64, seed=6)
+    xs = quant.abs_max_scale(x, 6)
+    xq = quant.quantize(x, xs, 6).astype(jnp.int8)
+    fused = cim_matmul_fused_pallas(x, wq, xs, seed=9, sigma=2.0, in_bits=6,
+                                    scale=0.02, interpret=True)
+    twopass = cim_matmul_pallas(xq, wq, seed=9, sigma=2.0, scale=0.02,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(twopass))
+
+
+def test_ops_deployed_matches_ref_dispatch():
+    """cim_matmul_deployed: pallas-interpret and ref dispatch agree, and the
+    ref construction equals explicit quantize + cim_matmul_int."""
+    spec = CIMSpec()
+    key = jax.random.PRNGKey(8)
+    x = jax.random.normal(key, (4, 1536))
+    _, wq = _rand_operands(4, 1536, 40, seed=9)
+    ws = jnp.float32(0.021)
+    nk = jax.random.fold_in(key, 1)
+    y_p = ops.cim_matmul_deployed(x, wq, ws, spec, nk,
+                                  force="pallas_interpret")
+    y_r = ops.cim_matmul_deployed(x, wq, ws, spec, nk, force="ref")
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_r),
+                               rtol=5e-6, atol=2e-5)
+    from repro.core.prng import seed_from_key
+    from repro.core.cim import output_noise_std_int_per_tile
+
+    xs = quant.abs_max_scale(x.astype(jnp.float32), spec.in_bits)
+    xq = quant.quantize(x.astype(jnp.float32), xs, spec.in_bits)
+    sigma = output_noise_std_int_per_tile(spec, x.shape[1])
+    y_m = ops.cim_matmul_int(xq, wq, seed_from_key(nk), sigma,
+                             scale=xs * ws, force="ref")
+    np.testing.assert_array_equal(np.asarray(y_r), np.asarray(y_m))
+
+
 def test_kernel_noise_moments():
     """In-kernel PRNG noise: per-tile std sigma, T tiles add in variance;
     zero-input matmul isolates the noise term exactly."""
@@ -136,8 +226,20 @@ def test_ops_wrapper_and_ste_grad():
     gx, gw = jax.grad(lambda x, w: ops.cim_matmul(x, w, spec, None).sum(),
                       argnums=(0, 1))(x, w)
     # STE backward equals the fake-quant matmul backward: g @ wq^T, xq^T @ g
+    # — now reconstructed lazily from the int8 residuals (the fwd no longer
+    # materialises f32 dequantized copies); values must be unchanged
     assert gx.shape == x.shape and gw.shape == w.shape
-    assert np.all(np.isfinite(np.asarray(gx)))
+    xs = quant.abs_max_scale(x.astype(jnp.float32), spec.in_bits)
+    ws = quant.abs_max_scale(w.astype(jnp.float32), spec.w_bits)
+    fq_x = quant.dequantize(quant.quantize(x.astype(jnp.float32), xs,
+                                           spec.in_bits), xs)
+    fq_w = quant.dequantize(quant.quantize(w.astype(jnp.float32), ws,
+                                           spec.w_bits), ws)
+    g = jnp.ones((16, 8), jnp.float32)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(g @ fq_w.T),
+                               rtol=1e-6, atol=0)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(fq_x.T @ g),
+                               rtol=1e-6, atol=0)
 
 
 def test_ops_batched_input():
