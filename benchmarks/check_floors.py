@@ -1,0 +1,81 @@
+"""CI acceptance floors over the latest BENCH_*.json run records.
+
+One shared gate script (the per-step heredocs used to copy-paste the
+record-scanning logic): each subcommand reads the newest bench run that
+carries its key and asserts the machine-independent ratio floors — both
+sides of every ratio are measured in the SAME bench run on the same
+machine.
+
+  python -m benchmarks.check_floors deploy    # §12 deployed fast path
+  python -m benchmarks.check_floors prefill   # §13 chunked prefill
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def last_with(path: str, key: str) -> dict:
+    for run in reversed(json.load(open(path))):
+        if key in run:
+            return run
+    raise SystemExit(f"{path}: no recorded run with {key}")
+
+
+def check_deploy() -> None:
+    """deploy_speedup_sim >= 1.15 (deployed vs per-call-quantization
+    engine, same run); decode_cost_ratio >= 4 (modeled decode-tile cost of
+    the bm=256 pad vs the skinny tile).
+
+    Floor history: PR 4 set 1.2 against a recorded 1.82 — but that sample
+    came from the *unpaired* differenced measurement, whose machine drift
+    between the two engine timings spans 0.73-1.62x across identical runs.
+    The paired-median measurement (PR 5, ``_deploy_ratio_samples``) puts
+    the true ratio at ~1.2-1.3 on the same container *including on the
+    unchanged PR 4 code*, so 1.2 had zero margin; 1.15 still cleanly
+    separates a working fast path (~1.25) from a lost one (~1.0).
+    """
+    serving = last_with("BENCH_serving.json", "deploy_speedup_sim")
+    kernels = last_with("BENCH_kernels.json", "decode_cost_ratio")
+    dep = serving["deploy_speedup_sim"]
+    cost = kernels["decode_cost_ratio"]
+    print(f"deploy_speedup_sim = {dep:.2f}x (floor 1.15x; samples "
+          f"{serving.get('deploy_speedup_sim_samples')})")
+    print(f"sim_vs_pr3_x       = {serving['sim_vs_pr3_x']:.2f}x "
+          "(>= 2x on the reference container)")
+    print(f"decode_cost_ratio  = {cost:.1f}x (floor 4x)")
+    assert dep >= 1.15, "sim fast path lost its speedup over PR 3"
+    assert cost >= 4.0, "decode tiles lost their modeled cost win"
+
+
+def check_prefill() -> None:
+    """Chunked prefill must beat whole-prompt buckets >= 1.5x on cold TTFT
+    (1 compiled chunk trace vs one per bucket) or warm mixed
+    prefill/decode throughput, compiled einsum path wall-clock — and must
+    compile exactly one prefill trace (-1 = the private jax trace-count
+    API is unavailable; the metric degrades instead of failing CI)."""
+    run = last_with("BENCH_serving.json", "accept_speedup_x")
+    x = run["accept_speedup_x"]
+    traces = run["chunked_prefill_traces_off"]
+    print(f"chunked cold_ttft_x_off   = {run['cold_ttft_x_off']:.2f}x")
+    print(f"chunked mixed_tok_s_x_off = {run['mixed_tok_s_x_off']:.2f}x")
+    print(f"accept ({run['accept_metric']}) = {x:.2f}x (floor 1.5x)")
+    print(f"prefill traces: chunked={traces} "
+          f"whole={run['whole_prefill_traces_off']}")
+    assert traces in (1, -1), \
+        "chunked prefill must compile exactly one trace"
+    assert x >= 1.5, "chunked prefill lost its speedup floor"
+
+
+CHECKS = {"deploy": check_deploy, "prefill": check_prefill}
+
+
+def main(argv) -> None:
+    if len(argv) != 1 or argv[0] not in CHECKS:
+        raise SystemExit(f"usage: check_floors {{{'|'.join(CHECKS)}}}")
+    CHECKS[argv[0]]()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

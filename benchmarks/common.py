@@ -42,6 +42,22 @@ def append_run(path: str, entry: dict) -> None:
         print(f"WARNING: could not write {path}: {e}", file=sys.stderr)
 
 
+def tiny_serving_setup():
+    """The shared shrunk-qwen2 serving-bench model: ONE definition so the
+    §12 deploy numbers (serving_bench) and §13 prefill numbers
+    (prefill_bench) in BENCH_serving.json stay shape-comparable."""
+    from repro.configs.registry import get_config
+    from repro.models.model import build
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=256,
+                              vocab_size=256, n_heads=4, n_kv_heads=2,
+                              head_dim=32)
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
 def time_call(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall time per call in microseconds (after jit warmup)."""
     for _ in range(warmup):

@@ -1,7 +1,10 @@
 """Aggregate the dry-run JSONs into the §Roofline table (EXPERIMENTS.md).
 
 Adds MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per cell and the
-useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy).
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy),
+plus the serving-attention kernel cells: the modeled KV-stream roofline of
+the GQA-native flash prefill path (DESIGN.md §13) across context depths —
+the byte term the replicated-MHA wrapper used to dominate with.
 """
 
 from __future__ import annotations
@@ -62,6 +65,29 @@ def load_rows() -> List[Dict]:
     return rows
 
 
+def flash_prefill_rows(h: int = 32, kv_heads: int = 8, d: int = 128,
+                       chunk: int = 32) -> List[Dict]:
+    """Modeled KV-stream bytes of one chunked-prefill launch per context
+    depth: GQA-native flash vs the replicated-MHA wrapper it replaced."""
+    from repro.kernels.flash_attention import flash_gqa_modeled_cost
+
+    rows = []
+    for t in (512, 2048, 8192):
+        for tag, kv_bytes in (("f32", 4), ("int8", 1)):
+            m = flash_gqa_modeled_cost(b=1, s=chunk, t=t, h=h,
+                                       kv_heads=kv_heads, d=d,
+                                       start=t // 2, kv_bytes=kv_bytes)
+            rows.append({
+                "cell": f"flash_prefill_T{t}_{tag}",
+                "kv_stream_mib_native": m["kv_stream_bytes_native"] / 2**20,
+                "kv_stream_mib_replicated":
+                    m["kv_stream_bytes_replicated"] / 2**20,
+                "kv_stream_ratio": m["kv_stream_ratio"],
+                "total_ratio": m["total_ratio"],
+            })
+    return rows
+
+
 def run() -> dict:
     rows = load_rows()
     ok = [r for r in rows if r["status"] == "ok"]
@@ -69,16 +95,28 @@ def run() -> dict:
     by_dom = {}
     for r in ok:
         by_dom[r["roofline"]["dominant"]] = by_dom.get(r["roofline"]["dominant"], 0) + 1
-    return {
+    flash = flash_prefill_rows()
+    out = {
         "cells_ok": len(ok),
         "cells_skipped": len(skipped),
         "dominant_histogram": by_dom,
-        "worst_roofline_fraction": min(
-            (r["roofline_fraction"], r["cell"]) for r in ok),
-        "most_collective_bound": max(
-            (r["roofline"]["collective_s"] / max(r["roofline"]["compute_s"], 1e-12),
-             r["cell"]) for r in ok),
+        # per-cell KV-stream ratios (native kernel vs replicated wrapper);
+        # a dict so benchmarks.run keeps it out of the CSV line but
+        # experiments/bench_results.json records every cell
+        "flash_prefill_kv_ratios": {
+            r["cell"]: round(r["kv_stream_ratio"], 2) for r in flash},
+        "flash_prefill_kv_ratio_min": min(
+            (r["kv_stream_ratio"], r["cell"]) for r in flash),
+        "flash_prefill_kv_ratio_max": max(
+            (r["kv_stream_ratio"], r["cell"]) for r in flash),
     }
+    if ok:  # dry-run JSONs are optional (REPRO_DRYRUN_DIR may be absent)
+        out["worst_roofline_fraction"] = min(
+            (r["roofline_fraction"], r["cell"]) for r in ok)
+        out["most_collective_bound"] = max(
+            (r["roofline"]["collective_s"] / max(r["roofline"]["compute_s"], 1e-12),
+             r["cell"]) for r in ok)
+    return out
 
 
 def markdown_table(rows: List[Dict]) -> str:

@@ -26,7 +26,8 @@ def main() -> None:
 
     from benchmarks import (attention_bench, cim_dense_bench, fig2_swing,
                             fig4_sac, fig5_column, fig6_summary, kernel_bench,
-                            roofline_report, serving_bench, vit_accuracy)
+                            prefill_bench, roofline_report, serving_bench,
+                            vit_accuracy)
 
     benches = {
         "fig5_column": fig5_column.run,
@@ -38,6 +39,7 @@ def main() -> None:
         "cim_dense_bench": cim_dense_bench.run,
         "serving_bench": serving_bench.run,
         "attention_bench": attention_bench.run,
+        "prefill_bench": prefill_bench.run,
         "roofline_report": roofline_report.run,
         "perf_gains": roofline_report.perf_gains,
     }

@@ -16,8 +16,12 @@ Since PR 4 the sim rows also record the deploy fast path (DESIGN.md §12):
 planes, deployed at construction), ``fused_nodeploy_decode_tok_s_sim``
 re-runs the PR 3 per-call-quantization path on the same machine, and
 ``deploy_speedup_sim`` is their machine-independent ratio (the CI
-acceptance floor). ``sim_vs_pr3_x`` compares against the last PR 3 run
-recorded on the reference container (meaningful there, trend-only in CI).
+acceptance floor) — since PR 5 measured as the median of interleaved
+*paired* reps on two persistent engines (``_deploy_ratio_samples``; the
+unpaired ratio drifted 0.73-1.62x across identical runs on the 2-core
+container, which is noise, not a 1.8x effect). ``sim_vs_pr3_x`` compares
+against the last PR 3 run recorded on the reference container
+(meaningful there, trend-only in CI).
 
 Results append to BENCH_serving.json at the repo root (PR-over-PR record):
 
@@ -26,11 +30,9 @@ Results append to BENCH_serving.json at the repo root (PR-over-PR record):
 
 from __future__ import annotations
 
-import dataclasses
 import os
 import time
 
-import jax
 import numpy as np
 
 _BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
@@ -46,16 +48,9 @@ PR3_SIM_BASELINE_TOK_S = 474.5
 
 
 def _setup():
-    from repro.configs.registry import get_config
-    from repro.models.model import build
+    from benchmarks.common import tiny_serving_setup
 
-    cfg = get_config("qwen2-0.5b").reduced()
-    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=256,
-                              vocab_size=256, n_heads=4, n_kv_heads=2,
-                              head_dim=32)
-    api = build(cfg)
-    params, _ = api.init(jax.random.PRNGKey(0))
-    return cfg, params
+    return tiny_serving_setup()
 
 
 def _requests(cfg, new_tokens: int):
@@ -81,9 +76,42 @@ def _decode_tok_s(engine_cls, cfg, params, mode: str, **engine_kw) -> float:
                         max_len=PROMPT_LEN + LONG + 8, cim_mode=mode,
                         **engine_kw)
     _timed_generate(engine, cfg, SHORT)          # compile prefill + decode
-    t_short = min(_timed_generate(engine, cfg, SHORT) for _ in range(2))
-    t_long = min(_timed_generate(engine, cfg, LONG) for _ in range(2))
+    # min-of-3: the differenced ratio is sensitive to a single slow sample
+    # on the 2-core container (a min-of-2 run once recorded the deployed
+    # engine at 0.87x its own baseline; the CI floor gates this number)
+    t_short = min(_timed_generate(engine, cfg, SHORT) for _ in range(3))
+    t_long = min(_timed_generate(engine, cfg, LONG) for _ in range(3))
     return SLOTS * (LONG - SHORT) / max(t_long - t_short, 1e-9)
+
+
+def _deploy_ratio_samples(cfg, params, reps: int = 5):
+    """Paired deployed-vs-nodeploy decode ratios for the CI floor.
+
+    The unpaired version (measure one engine fully, then the other)
+    recorded ratios from 0.73 to 1.62 across identical runs on the 2-core
+    container — machine drift between the two measurements dominates the
+    ~1.8x effect being gated. Pairing interleaves the two engines inside
+    each rep (same machine state), reuses both compiled engines across
+    reps, and the gate takes the median rep.
+    """
+    from repro.serving.engine import Engine
+
+    kw = dict(max_slots=SLOTS, max_len=PROMPT_LEN + LONG + 8,
+              cim_mode="sim")
+    dep = Engine(cfg, params, **kw)
+    nod = Engine(cfg, params, deploy=False, **kw)
+    for e in (dep, nod):
+        _timed_generate(e, cfg, SHORT)           # compile prefill + decode
+        _timed_generate(e, cfg, LONG)
+    ratios, nod_tok_s = [], 0.0
+    for _ in range(reps):
+        ds = min(_timed_generate(dep, cfg, SHORT) for _ in range(2))
+        dl = min(_timed_generate(dep, cfg, LONG) for _ in range(2))
+        ns = min(_timed_generate(nod, cfg, SHORT) for _ in range(2))
+        nl = min(_timed_generate(nod, cfg, LONG) for _ in range(2))
+        ratios.append(max(nl - ns, 1e-9) / max(dl - ds, 1e-9))
+        nod_tok_s = SLOTS * (LONG - SHORT) / max(nl - ns, 1e-9)
+    return ratios, nod_tok_s
 
 
 def run() -> dict:
@@ -99,10 +127,13 @@ def run() -> dict:
         out[f"loop_decode_tok_s_{mode}"] = loop
         out[f"speedup_{mode}"] = fused / loop
     # before/after for the PR 4 deploy fast path: same machine, same shapes,
-    # deploy=False is exactly the PR 3 per-call-quantization engine
-    nodeploy = _decode_tok_s(Engine, cfg, params, "sim", deploy=False)
+    # deploy=False is exactly the PR 3 per-call-quantization engine.
+    # Interleaved paired sampling + median (see _deploy_ratio_samples) —
+    # the unpaired ratio was too drift-sensitive for the 1.2x CI floor.
+    ratios, nodeploy = _deploy_ratio_samples(cfg, params)
     out["fused_nodeploy_decode_tok_s_sim"] = nodeploy
-    out["deploy_speedup_sim"] = out["fused_decode_tok_s_sim"] / nodeploy
+    out["deploy_speedup_sim_samples"] = sorted(round(r, 3) for r in ratios)
+    out["deploy_speedup_sim"] = float(np.median(ratios))
     out["sim_vs_pr3_x"] = out["fused_decode_tok_s_sim"] / PR3_SIM_BASELINE_TOK_S
     from benchmarks.common import append_run
     append_run(_BENCH_JSON, out)

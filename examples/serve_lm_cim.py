@@ -54,9 +54,12 @@ def main():
     print(f"deployed {ps['planes']} weight planes "
           f"({ps['int8_bytes'] / 2**20:.2f} MiB int8)")
 
-    # fused slot-batched engine: one jitted decode step advances both slots
+    # fused slot-batched engine: one jitted decode step advances both
+    # slots, and prompts stream through one chunked-prefill trace
+    # interleaved with decode (DESIGN.md §13)
     engine = Engine(cfg, params, max_slots=2, max_len=64, cim_mode="sim",
-                    deploy=False)  # params already deployed above
+                    deploy=False,  # params already deployed above
+                    record_ttft=True)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, 12, dtype=np.int32),
                     max_new_tokens=args.new_tokens)
@@ -65,9 +68,13 @@ def main():
     outs = engine.generate(reqs)
     dt = time.time() - t0
     n_tok = sum(len(o) for o in outs)
+    ttfts = [t for t in engine.ttft_s if t is not None]
     print(f"served {len(reqs)} requests / {n_tok} tokens on the CIM model "
           f"in {dt:.1f}s ({n_tok / dt:.1f} tok/s, "
-          f"{engine.prefill_traces} prefill traces)")
+          f"{engine.prefill_traces} prefill traces, "
+          f"chunk={engine.chunk_size})")
+    print(f"TTFT mean {np.mean(ttfts) * 1e3:.0f} ms / "
+          f"max {np.max(ttfts) * 1e3:.0f} ms")
 
     # what would the macro burn per generated token?
     em = energy.calibrated_model()

@@ -299,3 +299,35 @@ def decode_attention_ref(q, k, v, lens, ks=None, vs=None):
     out = jnp.einsum("bkgt,btkd->bkgd", p, vf)
     out = jnp.where(lens[:, None, None, None] > 0, out, 0.0)
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def flash_gqa_ref(q, k, v, start=None, ks=None, vs=None):
+    """GQA-native flash-prefill oracle (``kernels.flash_gqa_attention``).
+
+    q: (B, S, H, D); k, v: (B, T, KV, D) slot cache, optionally int8 with
+    ``ks``/``vs`` (B, T, KV, 1) scales. ``start: (B,)`` gives the
+    ``_cached_mask`` semantics — query i of row b sits at absolute
+    position start[b]+i and may attend key j iff j <= start[b]+i (causal)
+    and j < start[b]+S (freshly written prefix; recycled slots keep stale
+    keys beyond the row's length and must never expose them).
+    """
+    b, s, h, d = q.shape
+    t, kv_heads = k.shape[1], k.shape[2]
+    g = h // kv_heads
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if ks is not None:
+        kf = kf * ks
+        vf = vf * vs
+    if start is None:
+        start = jnp.zeros((b,), jnp.int32)
+    qr = q.reshape(b, s, kv_heads, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qr, kf) / jnp.sqrt(
+        jnp.float32(d))
+    qi = jnp.arange(s)[None, :, None] + start[:, None, None]     # (B, S, 1)
+    kj = jnp.arange(t)[None, None, :]
+    mask = (kj <= qi) & (kj < (start[:, None, None] + s))        # (B, S, T)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -6,7 +6,14 @@ reference engine for comparison.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --requests 6 --new-tokens 12 [--cim sim] [--engine fused|loop] \
-      [--attn-impl kernel]
+      [--attn-impl kernel] [--chunk-size 32]
+
+``--chunk-size`` controls the fused engine's chunked prefill
+(DESIGN.md §13): admitted prompts stream through one fixed-shape jitted
+chunk program interleaved with decode steps — exactly 1 prefill trace and
+no decode stall behind a long prompt. ``0`` forces the legacy whole-prompt
+bucketed path; the default (auto) chunks the right-pad-safe families and
+falls back to whole-prompt for ssm/hybrid/moe.
 
 ``--attn-impl kernel`` routes cached GQA attention through the
 length-aware Pallas decode kernel + causal-pruned flash prefill
@@ -48,6 +55,19 @@ def main():
              "(sim-mode inference fast path, DESIGN.md §12); 'auto' deploys "
              "whenever --cim sim")
     ap.add_argument(
+        "--chunk-size", type=int, default=-1,
+        help="fused-engine prefill chunk (tokens): prompts stream through "
+             "one fixed-shape jitted chunk trace interleaved with decode "
+             "steps (DESIGN.md §13); 0 = legacy whole-prompt bucketed "
+             "prefill, -1 = auto (chunk dense/vlm, whole-prompt for the "
+             "exact-length families)")
+    ap.add_argument(
+        "--ttft", action="store_true",
+        help="record and print per-request TTFT (fused engine only). "
+             "Off by default: the per-first-token block_until_ready stalls "
+             "the fused engine's async dispatch pipeline, which would skew "
+             "the printed tok/s in --engine fused-vs-loop comparisons")
+    ap.add_argument(
         "--attn-impl", default="config",
         choices=["config", "einsum", "kernel"],
         help="cached-GQA attention path: 'kernel' = length-aware Pallas "
@@ -63,13 +83,20 @@ def main():
     api = build(cfg)
     params, _ = api.init(jax.random.PRNGKey(0))
     engine_cls = Engine if args.engine == "fused" else LoopEngine
+    engine_kw = dict(cim_mode=args.cim,
+                     attn_impl=(None if args.attn_impl == "config"
+                                else args.attn_impl),
+                     deploy={"auto": None, "on": True,
+                             "off": False}[args.deploy])
+    if engine_cls is Engine:
+        # only -1 means auto; other negatives pass through so the engine's
+        # own chunk_size validation rejects them loudly
+        engine_kw["chunk_size"] = (None if args.chunk_size == -1
+                                   else args.chunk_size)
+        engine_kw["record_ttft"] = args.ttft
     engine = engine_cls(cfg, params, max_slots=args.slots,
                         max_len=args.prompt_len + args.new_tokens + 8,
-                        cim_mode=args.cim,
-                        attn_impl=(None if args.attn_impl == "config"
-                                   else args.attn_impl),
-                        deploy={"auto": None, "on": True,
-                                "off": False}[args.deploy])
+                        **engine_kw)
     if engine.deployed:
         from repro.core.deploy import plane_summary
         ps = plane_summary(engine.params)
@@ -87,6 +114,12 @@ def main():
     total_tokens = sum(len(o) for o in outs)
     print(f"[{args.engine}] served {len(reqs)} requests, {total_tokens} "
           f"tokens in {dt:.1f}s ({total_tokens / dt:.1f} tok/s)")
+    ttfts = [t for t in getattr(engine, "ttft_s", []) if t is not None]
+    if ttfts:
+        print(f"  TTFT mean {np.mean(ttfts) * 1e3:.0f} ms / "
+              f"max {np.max(ttfts) * 1e3:.0f} ms "
+              f"({engine.prefill_traces} prefill traces, "
+              f"chunk={engine.chunk_size})")
     for i, o in enumerate(outs[:4]):
         print(f"  req{i}: {o[:10]}...")
 

@@ -23,8 +23,10 @@ GQA cached attention runs one of two implementations, selected by
     the reference path, bit-stable across batch shapes.
   * ``"kernel"`` — decode (S==1) through the length-aware Pallas kernel
     (``kernels.decode_attention``, O(len[b]) per row instead of
-    O(max_len)); prefill (S>1) through the causal-block-pruned flash
-    kernel with per-row start offsets. Interpret mode off-TPU.
+    O(max_len)); prefill (S>1) through the GQA-native causal-block-pruned
+    flash kernel (``kernels.flash_gqa_attention``) with per-row start
+    offsets — the cache streams as stored (no head replication, int8
+    dequantised in-kernel). Interpret mode off-TPU.
 """
 
 from __future__ import annotations
@@ -38,7 +40,7 @@ from repro.configs.base import ModelConfig
 from repro.models.layers import Ctx, Params, _init_dense, apply_rope, dense
 from repro.distributed.sharding import shard
 from repro.kernels.decode_attention import decode_attention
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import flash_gqa_attention
 
 NEG_INF = -1e30
 
@@ -144,27 +146,23 @@ def _pow2_block(n: int, cap: int = 128, lo: int = 8) -> int:
     return max(lo, min(cap, 1 << (max(n, 1) - 1).bit_length()))
 
 
-def _flash_prefill(q, k_f, v_f, start) -> jnp.ndarray:
-    """Bucketed prefill through the flash kernel (attn_impl="kernel").
+def _flash_prefill(q, k_c, v_c, start, ks=None, vs=None) -> jnp.ndarray:
+    """Chunked/bucketed prefill through the GQA-native flash kernel
+    (attn_impl="kernel", DESIGN.md §13).
 
-    q: (B,S,H,D); k_f, v_f: (B,T,KV,D) dequantised cache. GQA KV heads are
-    expanded to H (order matches ``_sdpa``'s h = kv*G + g grouping) and
-    (B, H) folds into flash's row axis with per-row ``start`` offsets, so
-    right-padded bucket prefill gets the causal-block-pruned O(s*d + t*d)
-    path instead of materialised (s, t) scores.
+    q: (B,S,H,D); k_c, v_c: (B,T,KV,D) slot cache streamed *as stored* —
+    head grouping happens in-kernel (the G-fold ``jnp.repeat`` copy the
+    old MHA-shaped wrapper paid per prefill is gone) and an int8 cache
+    (``ks``/``vs`` scales) dequantises on the VMEM-resident block, so the
+    cache never round-trips HBM at f32. Per-row ``start`` offsets give the
+    causal-block-pruned continued-prefill path for any chunk of the
+    prompt.
     """
-    b, s, h, d = q.shape
-    t, kvh = k_f.shape[1], k_f.shape[2]
-    g = h // kvh
-    kx = jnp.repeat(k_f, g, axis=2)
-    vx = jnp.repeat(v_f, g, axis=2)
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kf = kx.transpose(0, 2, 1, 3).reshape(b * h, t, d)
-    vf = vx.transpose(0, 2, 1, 3).reshape(b * h, t, d)
-    st = jnp.repeat(start.astype(jnp.int32), h)
-    out = flash_attention(qf, kf, vf, causal=True, start=st,
-                          block_q=_pow2_block(s), block_k=_pow2_block(t))
-    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    s = q.shape[1]
+    t = k_c.shape[1]
+    return flash_gqa_attention(q, k_c, v_c, start=start.astype(jnp.int32),
+                               ks=ks, vs=vs, block_q=_pow2_block(s),
+                               block_k=_pow2_block(t))
 
 
 def _cached_mask(start: jnp.ndarray, s: int, t: int) -> jnp.ndarray:
@@ -242,15 +240,12 @@ def gqa_attention(
                 out = decode_attention(q[:, 0], ck_s, cv_s, start + 1)
             out = out[:, None]
         elif impl == "kernel":
-            # bucketed prefill via flash (causal block pruning + per-row
-            # start offsets). Prefill touches the whole live prefix anyway,
-            # so the int8 cache is dequantised up front here.
-            if int8_cache:
-                ck_f = (ck_s.astype(jnp.float32) * cks).astype(x.dtype)
-                cv_f = (cv_s.astype(jnp.float32) * cvs).astype(x.dtype)
-            else:
-                ck_f, cv_f = ck_s, cv_s
-            out = _flash_prefill(q, ck_f, cv_f, start)
+            # chunked/bucketed prefill via GQA-native flash (causal block
+            # pruning + per-row start offsets); int8 stays int8 in HBM and
+            # dequantises in-kernel, exactly as the decode kernel does.
+            out = _flash_prefill(q, ck_s, cv_s, start,
+                                 ks=cks if int8_cache else None,
+                                 vs=cvs if int8_cache else None)
         elif int8_cache:
             # einsum fallback: scales fold into logits/probs — no f32
             # dequantised copy of the whole (B, T, KV, D) cache per step

@@ -7,11 +7,16 @@ Two engines share the ``Request`` API:
   program advances *every* active slot per step against per-sequence cache
   lengths, samples the next token on device (temperature or argmax per row)
   and never round-trips a token through the host — emitted tokens are
-  drained device→host in periodic batches. Prefill pads prompts into
-  power-of-two length buckets (attention families) so at most
-  O(log2 max_len) prefill traces exist, and writes the prefilled rows into
-  their slot with ``dynamic_update_slice`` — slot recycling never
-  re-allocates the cache.
+  drained device→host in periodic batches. Prefill is *chunked*
+  (DESIGN.md §13): admitted prompts stream through ONE fixed-shape jitted
+  chunk program in ``chunk_size`` slices, interleaved with the decode
+  steps of the other slots — exactly 1 prefill trace, bounded per-step
+  latency, no decode stall behind a long prompt. The scheduler tracks each
+  slot's prefill progress host-side. ``chunk_size=0`` (and the
+  exact-length families: ssm/hybrid recurrent state would absorb chunk
+  padding, moe routing capacity scales with per-forward token count) falls
+  back to the whole-prompt power-of-two-bucket path — O(log2 max_len)
+  traces, every decode slot stalled for the full prompt on admit.
 
 * ``LoopEngine`` — the frozen seed reference ("vLLM-lite"): one batch-1
   cache per slot and one jitted decode dispatch per slot per token, with a
@@ -22,6 +27,7 @@ Two engines share the ``Request`` API:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, List, Optional, Tuple
 
 import jax
@@ -31,6 +37,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
 from repro.models.layers import Ctx
+
+# default prefill chunk: small enough to bound the decode stall a chunk
+# inserts, large enough that the per-chunk dispatch/attention overhead
+# amortises (DESIGN.md §13)
+DEFAULT_CHUNK_SIZE = 32
 
 
 @dataclasses.dataclass
@@ -46,6 +57,20 @@ def _pow2_bucket(n: int, lo: int = 8) -> int:
     while b < n:
         b *= 2
     return b
+
+
+def _jit_cache_size(jitted) -> int:
+    """Compiled-trace count behind a ``jax.jit`` callable, or -1.
+
+    ``_cache_size`` is a private jax API (present on 0.4.37, the pinned
+    toolchain). The trace count is a bench/CI *metric*, not a correctness
+    input — a jax upgrade that renames the API must degrade the metric to
+    -1, not crash the engine.
+    """
+    try:
+        return int(jitted._cache_size())
+    except Exception:
+        return -1
 
 
 def _check_attn_impl(cfg: ModelConfig, attn_impl: str) -> None:
@@ -93,18 +118,21 @@ def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
 class Engine:
     """Fused slot-batched engine: one jitted step advances all slots."""
 
-    # right-padded prefill is masked out by the per-row causal/validity mask
-    # for attention caches. Exact-length prefill (no bucketing) elsewhere:
-    # recurrent SSM state would absorb the pad tokens, and MoE expert
-    # capacity scales with the padded token count (pad tokens would change
-    # keep/drop routing decisions vs exact length).
+    # right-padded prefill (chunked or bucketed) is masked out by the
+    # per-row causal/validity mask for attention caches. Exact-length
+    # prefill (no chunking, no bucketing) elsewhere: recurrent SSM state
+    # would absorb the pad tokens, and MoE expert capacity scales with the
+    # per-forward token count (both padding *and* chunk boundaries would
+    # change keep/drop routing decisions vs the whole prompt).
     _BUCKETED_FAMILIES = ("dense", "vlm")
 
     def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
                  max_len: int = 512, cim_mode: Optional[str] = None,
                  seed: int = 0, drain_every: int = 64,
                  attn_impl: Optional[str] = None,
-                 deploy: Optional[bool] = None):
+                 deploy: Optional[bool] = None,
+                 chunk_size: Optional[int] = None,
+                 record_ttft: bool = False):
         if cfg.family == "encdec":
             raise ValueError("encdec serving needs per-request encoder "
                              "frames; the token-only engines don't carry them")
@@ -119,8 +147,35 @@ class Engine:
         self.max_slots = max_slots
         self.max_len = max_len
         self.drain_every = drain_every
+        self.record_ttft = record_ttft
+        self.ttft_s: List[Optional[float]] = []
         self.key = jax.random.PRNGKey(seed)
         self._bucketed = cfg.family in self._BUCKETED_FAMILIES
+        # chunk_size=None -> auto: chunked prefill (DESIGN.md §13) for the
+        # right-pad-safe families, whole-prompt exact-length for the rest.
+        # chunk_size=0 forces the legacy whole-prompt bucketed path (the
+        # prefill_bench baseline); an explicit chunk on an exact-length
+        # family is a loud error, never a silent einsum-style fallback.
+        if chunk_size is not None and chunk_size < 0:
+            raise ValueError(f"chunk_size must be >= 0, got {chunk_size}")
+        if chunk_size is None:
+            chunk_size = DEFAULT_CHUNK_SIZE if self._bucketed else 0
+        elif chunk_size > 0 and not self._bucketed:
+            raise ValueError(
+                f"chunk_size={chunk_size} is not supported for the "
+                f"'{cfg.family}' family '{cfg.name}': chunked prefill "
+                "right-pads the final chunk, which recurrent ssm/hybrid "
+                "state would absorb, and moe expert-capacity routing "
+                "depends on the per-forward token count — both would "
+                "silently change the generated tokens (DESIGN.md §13). "
+                "These families prefill whole prompts at exact length; "
+                "pass chunk_size=None (auto) or 0.")
+        self.chunk_size = int(chunk_size)
+        # the cache is over-allocated to the next chunk multiple so a final
+        # padded chunk's row_update can never clamp back onto live keys
+        # (chunk writes always start at a multiple of chunk_size)
+        self._alloc_len = (-(-max_len // self.chunk_size) * self.chunk_size
+                           if self.chunk_size else max_len)
         mode = cim_mode if cim_mode is not None else cfg.cim.mode
         # deploy=None auto-deploys pre-quantized weight planes for sim-mode
         # serving (core.deploy, DESIGN.md §12): weights are programmed once
@@ -131,7 +186,7 @@ class Engine:
         self.params = _maybe_deploy(cfg, params, self.deployed)
 
         # allocated once; recycled for the lifetime of the engine
-        self.caches = tf.init_caches(cfg, max_slots, max_len)
+        self.caches = tf.init_caches(cfg, max_slots, self._alloc_len)
         self.last_tok = jnp.zeros((max_slots,), jnp.int32)
         deployed = self.deployed
 
@@ -155,6 +210,37 @@ class Engine:
                                  ksamp)[0]
             return caches, last_tok.at[slot].set(tok), tok
 
+        def prefill_chunk_fn(params, caches, last_tok, tokens, reset, valid,
+                             is_final, slot, temp, key):
+            """Advance one slot's prefill by one fixed-shape chunk.
+
+            ``tokens``: (1, chunk_size), right-padded; ``valid`` of them are
+            real. ``reset`` zero-wipes the slot row on the first chunk (the
+            recycled-slot hygiene the whole-prompt path does); ``is_final``
+            commits the sampled first token into ``last_tok``. One shape ->
+            exactly one compiled trace for every prompt length.
+            """
+            kctx, ksamp = jax.random.split(key)
+            ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed)
+            slot_cache = tf.take_slot(caches, slot)
+            slot_cache = jax.tree.map(
+                lambda t: jnp.where(reset, jnp.zeros_like(t), t), slot_cache)
+            start = tf._cache_len(cfg, slot_cache)        # (1,) written keys
+            logits, slot_cache = tf.forward(params, {"tokens": tokens}, cfg,
+                                            ctx, slot_cache)
+            # the forward wrote (and advanced lens by) the full padded
+            # chunk; only `valid` of it is real — the pad keys land beyond
+            # the corrected length and the per-row validity mask never
+            # exposes them (the next chunk overwrites them in place)
+            slot_cache = tf.set_cache_lens(slot_cache, start + valid)
+            caches = tf.put_slot(caches, slot_cache, slot)
+            last = jax.lax.dynamic_index_in_dim(logits, valid - 1, axis=1,
+                                                keepdims=False)   # (1, V)
+            tok = _sample_tokens(last, jnp.full((1,), temp, jnp.float32),
+                                 ksamp)[0]
+            keep = jnp.where(is_final, tok, last_tok[slot])
+            return caches, last_tok.at[slot].set(keep), tok
+
         def decode_fn(params, caches, last_tok, active, temps, key):
             """One fused step: every active slot emits its next token."""
             kctx, ksamp = jax.random.split(key)
@@ -169,17 +255,26 @@ class Engine:
         # donate only the cache: last_tok/toks arrays stay referenced by the
         # pending-drain token log until device_get, so they must not alias
         self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
+        self._prefill_chunk = jax.jit(prefill_chunk_fn, donate_argnums=(1,))
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
 
     # ------------------------------------------------------------------ API
     @property
     def prefill_traces(self) -> int:
-        """Number of distinct prefill programs traced (== length buckets)."""
-        return int(self._prefill._cache_size())
+        """Distinct prefill programs traced: 1 for chunked prefill, one per
+        power-of-two bucket for the whole-prompt path (-1 if the private
+        trace-count API is unavailable on this jax)."""
+        sizes = (_jit_cache_size(self._prefill),
+                 _jit_cache_size(self._prefill_chunk))
+        if any(s < 0 for s in sizes):
+            return -1
+        return sum(sizes)
 
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Run all requests to completion; returns generated token lists."""
         self._validate(requests)
+        t_gen0 = time.perf_counter()
+        self.ttft_s = [None] * len(requests)
         queue = list(requests)
         for r in queue:
             r.out_tokens = []
@@ -187,6 +282,8 @@ class Engine:
 
         slots: List[Optional[Request]] = [None] * self.max_slots
         counts = [0] * self.max_slots
+        offsets = [0] * self.max_slots      # chunked-prefill tokens written
+        decoding = [False] * self.max_slots  # prefill done, slot in decode
         # emitted tokens stay on device until drained:
         # ("p", scalar_dev_tok, req_idx) | ("d", (B,) dev_toks, per-slot idx)
         pend: List[Tuple[str, Any, Any]] = []
@@ -204,10 +301,24 @@ class Engine:
                             requests[ri].out_tokens.append(int(v[s]))
             pend.clear()
 
+        def note_first_token(r: Request, tok) -> None:
+            if self.record_ttft:
+                jax.block_until_ready(tok)
+                self.ttft_s[req_index[id(r)]] = time.perf_counter() - t_gen0
+
         def fill_slots():
             for s in range(self.max_slots):
                 while slots[s] is None and queue:
                     r = queue.pop(0)
+                    if self.chunk_size > 0:
+                        # chunked admit costs nothing here: the prompt
+                        # streams through the main loop one chunk per step,
+                        # interleaved with the other slots' decode steps
+                        slots[s] = r
+                        offsets[s] = 0
+                        counts[s] = 0
+                        decoding[s] = False
+                        continue
                     prompt = np.asarray(r.prompt, np.int32)
                     true_len = prompt.shape[0]
                     bucket = (min(_pow2_bucket(true_len), self.max_len)
@@ -219,38 +330,78 @@ class Engine:
                         jnp.asarray(padded), true_len, s,
                         float(r.temperature), self._next_key())
                     pend.append(("p", tok, req_index[id(r)]))
+                    note_first_token(r, tok)
                     if r.max_new_tokens > 1:
                         slots[s] = r
                         counts[s] = 1
+                        decoding[s] = True
+
+        def prefill_chunks() -> bool:
+            """One chunk of progress for every still-prefilling slot;
+            returns True if any slot finished its prompt."""
+            finished = False
+            for s, r in enumerate(slots):
+                if r is None or decoding[s]:
+                    continue
+                prompt = np.asarray(r.prompt, np.int32)
+                off = offsets[s]
+                valid = min(self.chunk_size, prompt.shape[0] - off)
+                chunk = np.zeros((1, self.chunk_size), np.int32)
+                chunk[0, :valid] = prompt[off:off + valid]
+                is_final = off + valid >= prompt.shape[0]
+                self.caches, self.last_tok, tok = self._prefill_chunk(
+                    self.params, self.caches, self.last_tok,
+                    jnp.asarray(chunk), jnp.asarray(off == 0),
+                    jnp.asarray(valid, jnp.int32), jnp.asarray(is_final),
+                    s, float(r.temperature), self._next_key())
+                offsets[s] = off + valid
+                if is_final:
+                    pend.append(("p", tok, req_index[id(r)]))
+                    note_first_token(r, tok)
+                    if r.max_new_tokens > 1:
+                        decoding[s] = True
+                        counts[s] = 1
+                    else:
+                        slots[s] = None
+                    finished = True
+            return finished
 
         def slot_state():
-            act = np.array([r is not None for r in slots])
+            act = np.array([r is not None and decoding[s]
+                            for s, r in enumerate(slots)])
             tmp = np.array([float(r.temperature) if r is not None else 0.0
                             for r in slots], np.float32)
-            return jnp.asarray(act), jnp.asarray(tmp)
+            return act, jnp.asarray(act), jnp.asarray(tmp)
 
         fill_slots()
-        active, temps = slot_state()
+        act_host, active, temps = slot_state()
         steps = 0
         while any(r is not None for r in slots):
-            self.caches, toks = self._decode(
-                self.params, self.caches, self.last_tok, active, temps,
-                self._next_key())
-            self.last_tok = toks
-            pend.append(("d", toks,
-                         [req_index[id(r)] if r is not None else None
-                          for r in slots]))
             turnover = False
-            for s, r in enumerate(slots):
-                if r is None:
-                    continue
-                counts[s] += 1
-                if counts[s] >= r.max_new_tokens:
-                    slots[s] = None
-                    turnover = True
+            if prefill_chunks():
+                # a slot finished prefilling (or freed at max_new==1):
+                # refresh membership so it joins this iteration's decode
+                # step — or admit the next request into the free slot
+                fill_slots()
+                act_host, active, temps = slot_state()
+            if act_host.any():
+                self.caches, toks = self._decode(
+                    self.params, self.caches, self.last_tok, active, temps,
+                    self._next_key())
+                self.last_tok = toks
+                pend.append(("d", toks,
+                             [req_index[id(r)] if act_host[s] else None
+                              for s, r in enumerate(slots)]))
+                for s, r in enumerate(slots):
+                    if r is None or not act_host[s]:
+                        continue
+                    counts[s] += 1
+                    if counts[s] >= r.max_new_tokens:
+                        slots[s] = None
+                        turnover = True
             if turnover:
                 fill_slots()
-                active, temps = slot_state()
+                act_host, active, temps = slot_state()
             if len(pend) >= self.drain_every:
                 drain()
             steps += 1
@@ -320,7 +471,11 @@ class LoopEngine:
             logits, caches = tf.forward(params, {"tokens": tokens}, cfg, ctx, caches)
             return logits[:, -1], caches
 
-        self._prefill = jax.jit(prefill_fn)
+        # donate the (freshly allocated) prefill cache too: without it the
+        # reference engine double-buffers every slot cache on prefill —
+        # XLA must keep the zero-filled input alive while writing the
+        # prefilled output — which skews the loop-vs-fused memory baseline
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(2,))
         self._decode = jax.jit(decode_fn, donate_argnums=(2,))
 
     # ------------------------------------------------------------------ API

@@ -438,3 +438,152 @@ def test_flash_attention_start_prunes_per_row():
     assert counts[0, 0] == 1          # rows 0..7 live in block 0 only
     assert counts[1, 0] == 6          # rows 40..47 need blocks 0..5
     assert counts[1, 0] > counts[0, 0]
+
+
+# ------------------------------------------------- GQA-native flash prefill
+
+from repro.kernels.flash_attention import (flash_gqa_attention,
+                                           flash_gqa_modeled_cost)
+from repro.kernels.ref import flash_gqa_ref
+
+GQA_SHAPES = [
+    # (b, s, t, h, kv, d, starts)
+    (2, 10, 64, 8, 2, 64, [0, 17]),     # G=4, ragged starts
+    (1, 33, 96, 4, 4, 32, [60]),        # G=1 (MHA), s not block-aligned
+    (3, 16, 80, 6, 3, 16, [0, 5, 64]),  # G=2, t with non-pow2 divisor
+    (2, 1, 48, 8, 2, 32, [0, 40]),      # single-token chunk
+]
+
+
+def _gqa_operands(key, b, s, t, h, kv, d, int8=False):
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, h, d))
+    k = jax.random.normal(kk, (b, t, kv, d))
+    v = jax.random.normal(kv_, (b, t, kv, d))
+    if not int8:
+        return q, k, v, None, None
+    ks = jnp.maximum(jnp.max(jnp.abs(k), axis=-1, keepdims=True) / 127.0, 1e-8)
+    vs = jnp.maximum(jnp.max(jnp.abs(v), axis=-1, keepdims=True) / 127.0, 1e-8)
+    k8 = jnp.clip(jnp.round(k / ks), -127, 127).astype(jnp.int8)
+    v8 = jnp.clip(jnp.round(v / vs), -127, 127).astype(jnp.int8)
+    return q, k8, v8, ks, vs
+
+
+@pytest.mark.parametrize("b,s,t,h,kv,d,starts", GQA_SHAPES)
+def test_flash_gqa_matches_oracle(b, s, t, h, kv, d, starts):
+    q, k, v, _, _ = _gqa_operands(jax.random.PRNGKey(s + t), b, s, t, h, kv, d)
+    st = jnp.asarray(starts, jnp.int32)
+    y = flash_gqa_attention(q, k, v, start=st, block_q=8, block_k=16,
+                            interpret=True)
+    y_ref = flash_gqa_ref(q, k, v, start=st)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,t,h,kv,d,starts", GQA_SHAPES[:2])
+def test_flash_gqa_int8_matches_oracle(b, s, t, h, kv, d, starts):
+    """int8 KV dequantises on the VMEM-resident block in-kernel — the
+    cache never round-trips HBM at f32."""
+    q, k8, v8, ks, vs = _gqa_operands(jax.random.PRNGKey(3), b, s, t, h, kv,
+                                      d, int8=True)
+    st = jnp.asarray(starts, jnp.int32)
+    y = flash_gqa_attention(q, k8, v8, start=st, ks=ks, vs=vs, block_q=8,
+                            block_k=16, interpret=True)
+    y_ref = flash_gqa_ref(q, k8, v8, start=st, ks=ks, vs=vs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_gqa_block_shape_invariance():
+    """Re-blocking shifts only the online-softmax accumulation order —
+    outputs must agree to f32 accumulation tolerance across block sizes."""
+    b, s, t, h, kv, d = 2, 24, 96, 8, 2, 32
+    q, k, v, _, _ = _gqa_operands(jax.random.PRNGKey(11), b, s, t, h, kv, d)
+    st = jnp.asarray([0, 50], jnp.int32)
+    outs = [np.asarray(flash_gqa_attention(q, k, v, start=st, block_q=bq,
+                                           block_k=bk, interpret=True))
+            for bq, bk in [(8, 8), (8, 32), (32, 16), (128, 96)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-6, atol=2e-6)
+
+
+def test_flash_gqa_matches_replicated_mha_path():
+    """The GQA-native kernel must reproduce the replicated-KV wrapper it
+    replaced (repeat KV heads G-fold, fold (B, H) into MHA rows) — same
+    block partitioning, so the online-softmax accumulation order is
+    identical and agreement is bit-level."""
+    b, s, t, h, kv, d = 2, 16, 64, 8, 2, 32
+    g = h // kv
+    q, k, v, _, _ = _gqa_operands(jax.random.PRNGKey(5), b, s, t, h, kv, d)
+    st = jnp.asarray([0, 37], jnp.int32)
+    bq, bk = 8, 16
+    y = flash_gqa_attention(q, k, v, start=st, block_q=bq, block_k=bk,
+                            interpret=True)
+    # the old wrapper, verbatim: G-fold repeat + (B, H) row fold
+    kx = jnp.repeat(k, g, axis=2)
+    vx = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = kx.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    vf = vx.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    y_rep = flash_attention(qf, kf, vf, causal=True,
+                            start=jnp.repeat(st, h), block_q=bq, block_k=bk,
+                            interpret=True)
+    y_rep = y_rep.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_rep))
+
+
+def test_flash_gqa_causal_pruning_counts():
+    """k blocks above the per-row causal frontier must be skipped, and the
+    (B, KV, n_q) counts witness must match the closed form
+    ceil((start + qi_max + 1)/block_k) — identically across KV heads."""
+    b, s, t, h, kv, d = 2, 32, 64, 4, 2, 32
+    q, k, v, _, _ = _gqa_operands(jax.random.PRNGKey(8), b, s, t, h, kv, d)
+    starts = [0, 30]
+    st = jnp.asarray(starts, jnp.int32)
+    bq, bk = 8, 16
+    y, counts = flash_gqa_attention(q, k, v, start=st, block_q=bq,
+                                    block_k=bk, interpret=True,
+                                    return_block_counts=True)
+    counts = np.asarray(counts)
+    n_q, n_k = s // bq, t // bk
+    expected = np.asarray(
+        [[[min(n_k, (stt + min((i + 1) * bq, s) - 1) // bk + 1)
+           for i in range(n_q)] for _ in range(kv)] for stt in starts])
+    np.testing.assert_array_equal(counts, expected)
+    assert counts[1].sum() > counts[0].sum()      # deeper start, more blocks
+    assert counts.sum() < b * kv * n_q * n_k      # strictly pruned
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(flash_gqa_ref(q, k, v, start=st)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_is_gqa_native():
+    """The acceptance witness for DESIGN.md §13: the prefill wrapper must
+    not head-replicate the cache (``jnp.repeat``) or dequantise it up
+    front — both copies now happen (or rather, don't) in-kernel."""
+    import inspect
+
+    from repro.models.attention import _flash_prefill
+
+    src = inspect.getsource(_flash_prefill)
+    assert "repeat(" not in src, "G-fold KV replication is back"
+    assert "flash_gqa_attention" in src
+
+
+def test_flash_gqa_modeled_cost():
+    """KV-stream model: the f32 ratio is exactly the group size G (same
+    columns, H vs KV rows), int8 adds the 4x storage-width win; the
+    materialise term scales with the whole cache, not the visited blocks."""
+    m32 = flash_gqa_modeled_cost(b=4, s=32, t=256, h=8, kv_heads=2, d=64,
+                                 start=128, kv_bytes=4)
+    assert m32["kv_stream_ratio"] == pytest.approx(4.0)     # G = 4
+    m8 = flash_gqa_modeled_cost(b=4, s=32, t=256, h=8, kv_heads=2, d=64,
+                                start=128, kv_bytes=1)
+    assert m8["kv_stream_ratio"] > 3.5 * 4                  # ~4G (+scales)
+    assert m8["total_ratio"] > m8["kv_stream_ratio"]        # + materialise
+    # pruning: a zero-start launch visits fewer blocks than a deep one
+    shallow = flash_gqa_modeled_cost(b=1, s=32, t=256, h=8, kv_heads=2,
+                                     d=64, start=0)
+    deep = flash_gqa_modeled_cost(b=1, s=32, t=256, h=8, kv_heads=2, d=64,
+                                  start=192)
+    assert shallow["visited_blocks"] < deep["visited_blocks"]

@@ -113,15 +113,110 @@ def test_single_token_budget_honored(dense_setup):
     assert [len(o) for o in outs] == [1, 1, 1]
 
 
+# ------------------------------------------------ chunked prefill (§13)
+
+
+@pytest.mark.parametrize("int8,impl", [(False, "einsum"), (True, "einsum"),
+                                       (False, "kernel"), (True, "kernel")])
+def test_chunked_matches_whole_prompt_greedy(int8, impl):
+    """Chunked prefill (one fixed-shape trace, decode-interleaved) must be
+    token-for-token equal to the whole-prompt bucketed path on ragged
+    prompts with slot turnover — f32 and int8 KV, einsum and kernel
+    attention. Lengths cover < chunk, == chunk boundary, > 2 chunks, and
+    a 1-token prompt into a recycled slot."""
+    cfg = _tiny_dense_cfg(kv_cache_int8=int8, dtype="float32")
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    lens = [3, 18, 33, 16, 9, 1]
+    a = Engine(cfg, params, max_slots=2, max_len=48, chunk_size=16,
+               attn_impl=impl).generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(2)))
+    b = Engine(cfg, params, max_slots=2, max_len=48, chunk_size=0,
+               attn_impl=impl).generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(2)))
+    assert a == b, (a, b)
+
+
+def test_chunked_prefill_single_trace(dense_setup):
+    """Every prompt length must stream through ONE compiled chunk program
+    (the whole point vs O(log2 max_len) bucket traces)."""
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=16)
+    lens = [3, 4, 5, 9, 13, 17, 23, 33, 50]
+    reqs = [Request(prompt=np.random.default_rng(i).integers(
+                        0, cfg.vocab_size, L, dtype=np.int32),
+                    max_new_tokens=2) for i, L in enumerate(lens)]
+    eng.generate(reqs)
+    assert eng.prefill_traces == 1
+
+
+def test_chunked_default_and_fallbacks(dense_setup):
+    """chunk_size=None auto-chunks the right-pad-safe families and falls
+    back to whole-prompt for exact-length families; an explicit chunk on
+    those is a loud error, not a silent fallback."""
+    from repro.serving.engine import DEFAULT_CHUNK_SIZE
+
+    cfg, params = dense_setup
+    assert Engine(cfg, params, max_slots=1,
+                  max_len=32).chunk_size == DEFAULT_CHUNK_SIZE
+    for arch in ("mamba2-130m", "zamba2-7b", "olmoe-1b-7b"):
+        fam_cfg = get_config(arch).reduced()
+        eng = Engine(fam_cfg, params=None, max_slots=1, max_len=16)
+        assert eng.chunk_size == 0, arch       # documented fallback
+        with pytest.raises(ValueError, match="chunk"):
+            Engine(fam_cfg, params=None, max_slots=1, max_len=16,
+                   chunk_size=8)
+    with pytest.raises(ValueError, match="chunk_size"):
+        Engine(cfg, params, max_slots=1, max_len=32, chunk_size=-2)
+
+
+def test_chunked_near_max_len_boundary(dense_setup):
+    """A prompt whose final padded chunk extends past max_len must not
+    clamp its cache write back onto live keys: the cache over-allocates to
+    the next chunk multiple."""
+    cfg, params = dense_setup
+    lens = [13, 14]
+    a = Engine(cfg, params, max_slots=2, max_len=18, chunk_size=8).generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(3)))
+    b = Engine(cfg, params, max_slots=2, max_len=18, chunk_size=0).generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(3)))
+    assert a == b, (a, b)
+
+
+def test_record_ttft(dense_setup):
+    """record_ttft must stamp a first-token latency for every request."""
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, max_slots=2, max_len=32, record_ttft=True)
+    reqs = [Request(prompt=np.arange(1, 4 + i, dtype=np.int32),
+                    max_new_tokens=2) for i in range(3)]
+    eng.generate(reqs)
+    assert len(eng.ttft_s) == 3
+    assert all(t is not None and t > 0 for t in eng.ttft_s)
+
+
+def test_prefill_traces_degrades_without_private_api(dense_setup):
+    """prefill_traces rides jax's private ``_cache_size``; on a jax that
+    drops it the metric must degrade to -1, not crash (bench/CI guard)."""
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, max_slots=1, max_len=16)
+
+    class _NoCacheSize:
+        pass
+
+    eng._prefill = _NoCacheSize()
+    assert eng.prefill_traces == -1
+
+
 # --------------------------------------------------------- prefill buckets
 
 
 def test_prefill_bucket_trace_count(dense_setup):
-    """Mixed prompt lengths must compile at most log2(max_len) prefill
+    """The legacy whole-prompt path (chunk_size=0, and the exact-length
+    families' fallback) must compile at most log2(max_len) prefill
     programs (power-of-two buckets), not one per distinct length."""
     cfg, params = dense_setup
     max_len = 64
-    eng = Engine(cfg, params, max_slots=2, max_len=max_len)
+    eng = Engine(cfg, params, max_slots=2, max_len=max_len, chunk_size=0)
     lens = [3, 4, 5, 6, 7, 9, 11, 13, 17, 19, 23]
     reqs = [Request(prompt=np.random.default_rng(i).integers(
                         0, cfg.vocab_size, L, dtype=np.int32),
