@@ -23,6 +23,18 @@ def last_with(path: str, key: str) -> dict:
     raise SystemExit(f"{path}: no recorded run with {key}")
 
 
+def _floor(name: str, value, op: str, floor) -> None:
+    """Uniform floor gate: every check reports the same way, and a failure
+    always names the floor and the measured value (the old bare asserts
+    made CI logs a guessing game)."""
+    ok = {">=": value >= floor, "<=": value <= floor}[op]
+    status = "ok" if ok else "FAILED"
+    print(f"floor {status}: {name} = {value:.4g} (must be {op} {floor:g})")
+    if not ok:
+        raise SystemExit(
+            f"FLOOR FAILED: {name} = {value:.4g}, required {op} {floor:g}")
+
+
 def check_deploy() -> None:
     """deploy_speedup_sim >= 1.15 (deployed vs per-call-quantization
     engine, same run); decode_cost_ratio >= 4 (modeled decode-tile cost of
@@ -44,9 +56,8 @@ def check_deploy() -> None:
           f"{serving.get('deploy_speedup_sim_samples')})")
     print(f"sim_vs_pr3_x       = {serving['sim_vs_pr3_x']:.2f}x "
           "(>= 2x on the reference container)")
-    print(f"decode_cost_ratio  = {cost:.1f}x (floor 4x)")
-    assert dep >= 1.15, "sim fast path lost its speedup over PR 3"
-    assert cost >= 4.0, "decode tiles lost their modeled cost win"
+    _floor("deploy_speedup_sim", dep, ">=", 1.15)
+    _floor("decode_cost_ratio", cost, ">=", 4.0)
 
 
 def check_prefill() -> None:
@@ -60,15 +71,45 @@ def check_prefill() -> None:
     traces = run["chunked_prefill_traces_off"]
     print(f"chunked cold_ttft_x_off   = {run['cold_ttft_x_off']:.2f}x")
     print(f"chunked mixed_tok_s_x_off = {run['mixed_tok_s_x_off']:.2f}x")
-    print(f"accept ({run['accept_metric']}) = {x:.2f}x (floor 1.5x)")
+    print(f"accept metric: {run['accept_metric']}")
     print(f"prefill traces: chunked={traces} "
           f"whole={run['whole_prefill_traces_off']}")
-    assert traces in (1, -1), \
-        "chunked prefill must compile exactly one trace"
-    assert x >= 1.5, "chunked prefill lost its speedup floor"
+    if traces not in (1, -1):
+        raise SystemExit(
+            f"FLOOR FAILED: chunked_prefill_traces_off = {traces}, "
+            "required exactly 1 compiled trace (-1 = API unavailable)")
+    print(f"floor ok: chunked_prefill_traces_off = {traces} (1 or -1)")
+    _floor("accept_speedup_x", x, ">=", 1.5)
 
 
-CHECKS = {"deploy": check_deploy, "prefill": check_prefill}
+def check_faults() -> None:
+    """§14 fault campaign: the guard must be quiet on a healthy macro
+    (zero-fault false trips <= 1% of row positions), detect the bench fault
+    scenario (recall >= 0.9 over trials), hold guarded ViT accuracy within
+    1 pt of fault-free at the bench rate, and recover the end-to-end
+    serving victim onto the digital path token for token."""
+    run = last_with("BENCH_faults.json", "detection_recall")
+    sweep = run.get("vit_fault_sweep", [])
+    if sweep:
+        rows = ", ".join(
+            f"rate={e['adc_stuck_rate']:g}: unguarded "
+            f"{e['unguarded_acc']:.3f} / guarded {e['guarded_acc']:.3f}"
+            for e in sweep)
+        print(f"vit sweep (clean {run['vit_clean_acc']:.3f}): {rows}")
+    print(f"unguarded_drop_pt = {run['unguarded_drop_pt']:.2f} "
+          "(context, ungated)")
+    _floor("zero_fault_false_trip_rate",
+           run["zero_fault_false_trip_rate"], "<=", 0.01)
+    _floor("detection_recall", run["detection_recall"], ">=", 0.9)
+    _floor("guarded_drop_pt", run["guarded_drop_pt"], "<=", 1.0)
+    _floor("victim_token_match_vs_digital",
+           run["victim_token_match_vs_digital"], ">=", 1.0)
+    _floor("slots_bitexact_vs_pinned_twin",
+           float(run["slots_bitexact_vs_pinned_twin"]), ">=", 1.0)
+
+
+CHECKS = {"deploy": check_deploy, "prefill": check_prefill,
+          "faults": check_faults}
 
 
 def main(argv) -> None:

@@ -24,10 +24,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (attention_bench, cim_dense_bench, fig2_swing,
-                            fig4_sac, fig5_column, fig6_summary, kernel_bench,
-                            prefill_bench, roofline_report, serving_bench,
-                            vit_accuracy)
+    from benchmarks import (attention_bench, cim_dense_bench, fault_bench,
+                            fig2_swing, fig4_sac, fig5_column, fig6_summary,
+                            kernel_bench, prefill_bench, roofline_report,
+                            serving_bench, vit_accuracy)
 
     benches = {
         "fig5_column": fig5_column.run,
@@ -40,6 +40,7 @@ def main() -> None:
         "serving_bench": serving_bench.run,
         "attention_bench": attention_bench.run,
         "prefill_bench": prefill_bench.run,
+        "fault_bench": fault_bench.run,
         "roofline_report": roofline_report.run,
         "perf_gains": roofline_report.perf_gains,
     }
@@ -47,6 +48,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     results = {}
+    failures = []
     for name, fn in benches.items():
         if only and name not in only:
             continue
@@ -60,6 +62,7 @@ def main() -> None:
             results[name] = out
         except Exception as e:  # keep the harness going, report the failure
             print(f"{name},0,ERROR={type(e).__name__}: {e}")
+            failures.append(name)
     try:
         import os
         os.makedirs("experiments", exist_ok=True)
@@ -81,6 +84,11 @@ def main() -> None:
             json.dump(merged, f, indent=1, default=str)
     except OSError:
         pass
+    if failures:
+        # every bench already reported; exit nonzero so CI catches the run
+        # without one bad bench hiding the others' results
+        raise SystemExit(
+            f"{len(failures)} bench(es) failed: {', '.join(failures)}")
 
 
 if __name__ == "__main__":

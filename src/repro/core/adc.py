@@ -155,6 +155,16 @@ def decision_prob(d, sigma: float, p_glitch: float, glitch_mag: float):
     E_u[Phi((d+u)/sigma)] = (sigma/2G) * (I((d+G)/sigma) - I((d-G)/sigma)).
     ``sigma``/``p_glitch`` are trace-time constants, so the degenerate cases
     branch in Python and stay exact.
+
+    Contract (enforced at the ``sar_convert`` entry): ``sigma == 0`` is
+    supported only as the *fully deterministic* comparator (``p_glitch``
+    effectively 0). The glitch mixture models metastability of the
+    relaxed-*bias* fine comparator — a noiseless comparator has no relaxed
+    bias, so "sigma=0 but glitchy" is not a physical operating point; the
+    sigma=0 glitch branch below exists only so this function stays total
+    (it returns the exact hard-step/uniform-kick mixture), and callers
+    reaching it through the SAR engine get a loud ``ValueError`` instead of
+    a silently half-deterministic conversion.
     """
     # glitch_mag == 0 collapses the kick to a point mass at 0: the mixture
     # degenerates to the pure-Gaussian case (matches U(-0, 0) == 0 in the
@@ -204,8 +214,32 @@ def _dnl_shift(v: jnp.ndarray, spec: ADCSpec) -> jnp.ndarray:
     return v + table[idx]
 
 
-@partial(jax.jit, static_argnames=("spec", "cb"))
-def sar_convert(v: jnp.ndarray, key: jax.Array, spec: ADCSpec, cb: bool) -> jnp.ndarray:
+def validate_adc_spec(spec: ADCSpec) -> None:
+    """Reject degenerate operating points the analytic engine cannot honor.
+
+    ``sigma_cmp == 0`` with ``p_glitch > 0`` would simulate a noiseless
+    comparator that still glitches — not a physical point (see
+    ``decision_prob``); almost always the caller zeroed the noise for a
+    deterministic test and forgot the glitch term. Negative noise/glitch
+    parameters are plain nonsense.
+    """
+    if spec.sigma_cmp < 0.0 or spec.p_glitch < 0.0 or spec.glitch_mag < 0.0:
+        raise ValueError(
+            f"ADCSpec has negative noise parameters (sigma_cmp="
+            f"{spec.sigma_cmp}, p_glitch={spec.p_glitch}, glitch_mag="
+            f"{spec.glitch_mag})")
+    if spec.sigma_cmp == 0.0 and spec.p_glitch > 0.0 and spec.glitch_mag > 0.0:
+        raise ValueError(
+            f"degenerate ADCSpec: sigma_cmp=0 with p_glitch="
+            f"{spec.p_glitch} > 0 — the glitch mixture models metastability "
+            "of the relaxed-bias (noisy) comparator and has no noiseless "
+            "counterpart; set p_glitch=0 for a deterministic comparator or "
+            "sigma_cmp>0 for the calibrated mixture")
+
+
+@partial(jax.jit, static_argnames=("spec", "cb", "fault"))
+def sar_convert(v: jnp.ndarray, key: jax.Array, spec: ADCSpec, cb: bool,
+                fault=None) -> jnp.ndarray:
     """Convert analog values ``v`` (ideal-LSB units, [0, 2^bits)) to codes.
 
     Implements top-plate SAR: at the step for bit ``b`` the DAC trial level
@@ -222,17 +256,32 @@ def sar_convert(v: jnp.ndarray, key: jax.Array, spec: ADCSpec, cb: bool) -> jnp.
     vote model survives as ``ref.sar_convert_votes_ref``; tests check both
     per-decision probabilities (MC vote frequencies vs ``decision_prob``/
     ``majority_prob``) and end-to-end code statistics against it.
+
+    ``fault`` (``core.faults.FaultSpec``, static) injects the two
+    conversion-level structural faults (DESIGN.md §14): vote-count
+    *brownouts* — a per-conversion Bernoulli(brownout_rate) event (keyed on
+    this call's PRNG key) collapses every CB majority vote of that
+    conversion to ``brownout_votes`` — and *ADC stuck-code* — a
+    deterministic per-column subset (counter = global column index, i.e.
+    ``v``'s last axis) returns ``adc_stuck_code`` for every conversion.
+    The jnp oracle is ``kernels.ref.sar_convert_fault_ref``.
     """
     from repro.core.prng import (
         DOMAIN_SAR, key_words, threefry2x32, uniform_from_bits,
     )
 
+    validate_adc_spec(spec)
     w = dac_bit_weights(spec)
     vshape = v.shape
     v = _dnl_shift(v.reshape(-1), spec)
     k0, k1 = key_words(key)
     k0 = k0 ^ jnp.uint32(DOMAIN_SAR)  # separate stream from tile_gaussian
     idx = jax.lax.iota(jnp.uint32, v.shape[0])
+
+    brown = None
+    if fault is not None and fault.brownout_rate > 0.0 and cb:
+        from repro.core.faults import brownout_mask
+        brown = brownout_mask(fault, k0, k1, idx)
 
     n_coarse = spec.adc_bits - spec.mv_bits
     code = jnp.zeros_like(v, dtype=jnp.int32)
@@ -248,13 +297,19 @@ def sar_convert(v: jnp.ndarray, key: jax.Array, spec: ADCSpec, cb: bool) -> jnp.
         trial = level + w[b]
         bits, _ = threefry2x32(k0, k1, idx, jnp.uint32(step))
         u = uniform_from_bits(bits)
-        p = majority_prob(
-            decision_prob(v - trial, sigma, p_glitch, spec.glitch_mag), votes
-        )
+        p1 = decision_prob(v - trial, sigma, p_glitch, spec.glitch_mag)
+        p = majority_prob(p1, votes)
+        if brown is not None and votes > 1:
+            p = jnp.where(brown, majority_prob(p1, fault.brownout_votes), p)
         bit = u < p
         code = code + bit.astype(jnp.int32) * (1 << b)
         level = jnp.where(bit, trial, level)
-    return code.reshape(vshape)
+    code = code.reshape(vshape)
+    if fault is not None and fault.adc_stuck_rate > 0.0 and code.ndim >= 1:
+        from repro.core.faults import adc_stuck_cols
+        stuck = adc_stuck_cols(fault, vshape[-1])
+        code = jnp.where(stuck, jnp.int32(fault.adc_stuck_code), code)
+    return code
 
 
 def conversion_noise_lsb(spec: ADCSpec, cb: bool) -> float:

@@ -49,6 +49,7 @@ from repro.core.adc import (
     adc_total_error_var_lsb2,
     sar_convert,
 )
+from repro.core.faults import FaultSpec, apply_output_faults, column_gain, column_offset_z
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +71,12 @@ class CIMSpec:
                                      # the brute-force alternative to CB.
     noise_scale: float = 1.0         # multiplier on the output-referred noise
                                      # (benchmarks sweep effective CSNR with it)
+    fault: Optional[FaultSpec] = None  # structural-fault scenario (DESIGN.md
+                                     # §14); None = healthy macro. Stuck-at
+                                     # bitcells act at deploy time; the
+                                     # runtime faults (column gain/offset,
+                                     # ADC stuck-code, vote brownouts) act
+                                     # here in both sim fidelities.
 
     # --- derived -----------------------------------------------------------
     @property
@@ -177,9 +184,23 @@ def cim_matmul_bit_exact(
     # plane partial sums in charge units, all tiles x planes at once
     s = jnp.einsum("mtr,jtrn->tjmn", x3, w4)
     v = jnp.clip(gain * s + half, 0.0, 2.0 ** spec.adc_bits - 1.0)
-    code = sar_convert(v.reshape(t * spec.w_bits, m, n), key, adc, spec.cb)
+    code = sar_convert(v.reshape(t * spec.w_bits, m, n), key, adc, spec.cb,
+                       fault=spec.fault)
     s_hat = (code.astype(jnp.float32).reshape(t, spec.w_bits, m, n) - half) / gain
-    return qx * jnp.einsum("j,tjmn->mn", pw, s_hat)
+    y = qx * jnp.einsum("j,tjmn->mn", pw, s_hat)
+    f = spec.fault
+    if f is not None:
+        # conversion-level faults (brownout, ADC stuck-code) happened inside
+        # sar_convert; the readout-chain drift acts on the shift-added
+        # column output (gain is per-column constant, so post-sum
+        # multiplication is exact; offset is output-referred by definition)
+        g = column_gain(f, n)
+        if g is not None:
+            y = y * g
+        z = column_offset_z(f, n)
+        if z is not None:
+            y = y + (f.col_offset_std * output_noise_std_int(spec, k)) * z
+    return y
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +245,57 @@ def output_noise_std_int_per_tile(
     return output_noise_std_int(spec, k, include_static) / math.sqrt(tiles)
 
 
+# ---------------------------------------------------------------------------
+# output-referred fault parameters (shared by behavioural path + kernel path)
+# ---------------------------------------------------------------------------
+
+
+def adc_stuck_value_int(spec: CIMSpec, k: int) -> float:
+    """Output value (integer product units) of a stuck-ADC column.
+
+    A stuck column ADC returns ``adc_stuck_code`` for *every* conversion:
+    all ``T`` K-tiles times ``w_bits`` planes shift-add to
+    ``qx * T * sum_j pw_j * (code - half) / gain`` and the two's-complement
+    plane weights sum to exactly -1.
+    """
+    f = spec.fault
+    if f is None:
+        return 0.0
+    gain = spec.analog_gain(rows=k) * spec.attenuation
+    half = 2.0 ** (spec.adc_bits - 1)
+    tiles = _num_k_tiles(k, spec.macro_rows)
+    qx = quant.qmax(spec.in_bits)
+    return -tiles * qx * (f.adc_stuck_code - half) / gain
+
+
+def brownout_extra_std_int(spec: CIMSpec, k: int) -> float:
+    """Behavioural stand-in for vote brownouts: extra output noise std.
+
+    A browned-out conversion runs its CB majority votes at
+    ``brownout_votes`` instead of ``mv_votes``; in aggregate over the
+    ``T * w_bits`` conversions per output a Bernoulli(rate) mixture of the
+    two conversion variances adds ``rate * (var_brown - var)`` per
+    conversion, propagated through the same gain/shift-add chain as
+    ``output_noise_std_int`` (quant/INL/DNL cancel in the difference).
+    The bit-exact path instead mixes the votes per conversion — the
+    distributions agree in second order (tested).
+    """
+    f = spec.fault
+    if f is None or f.brownout_rate <= 0.0 or not spec.cb:
+        return 0.0
+    adc = spec.effective_adc()
+    dvar = max(
+        adc_total_error_var_lsb2(
+            dataclasses.replace(adc, mv_votes=f.brownout_votes), spec.cb)
+        - adc_total_error_var_lsb2(adc, spec.cb), 0.0)
+    gain = spec.analog_gain(rows=k) * spec.attenuation
+    s_bw = quant.sum_sq_plane_weights(spec.w_bits)
+    qx = quant.qmax(spec.in_bits)
+    tiles = _num_k_tiles(k, spec.macro_rows)
+    return (spec.noise_scale
+            * math.sqrt(f.brownout_rate * tiles * s_bw * dvar) * qx / gain)
+
+
 @partial(jax.jit, static_argnames=("spec",))
 def cim_matmul_behavioral(
     xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec: CIMSpec
@@ -251,6 +323,15 @@ def cim_matmul_behavioral(
     sigma = output_noise_std_int(spec, k)
     if sigma > 0.0:
         y = y + sigma * jax.random.normal(key, y.shape, jnp.float32)
+    f = spec.fault
+    if f is not None and f.any_output_fault():
+        # runtime structural faults, output-referred (DESIGN.md §14); the
+        # brownout key is folded off the main key so the healthy noise
+        # stream above is bit-identical with and without a fault spec
+        y = apply_output_faults(
+            y, f, sigma, adc_stuck_value_int(spec, k),
+            brownout_extra_std_int(spec, k),
+            key=jax.random.fold_in(key, 0x0FA1))
     return y
 
 

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import quant
+from repro.core.faults import FaultSpec, stuck_bit_plane
 from repro.core.sac import Policy, get_policy
 
 # parameter-dict key -> SAC role, mirroring the call sites in
@@ -92,19 +93,40 @@ def quantize_plane(w: jnp.ndarray, bits: int, reduce_axes: int):
 
 
 def deploy(cfg: ModelConfig, params: Any,
-           policy: Optional[Policy] = None) -> Any:
+           policy: Optional[Policy] = None,
+           fault: Optional[FaultSpec] = None,
+           guard: bool = False) -> Any:
     """Return a new params tree with pre-quantized weight planes attached.
 
     ``policy`` defaults to the config's SAC policy — the one sim-mode
     serving resolves roles against; deploying under a different policy than
     the serving context would silently mix bit-widths, so engines always
     pass their own config here.
+
+    ``guard`` additionally attaches an ABFT checksum plane ``wc<bits>``
+    (int32, the plane summed over output columns — ``core.guard`` compares
+    the analog column sum against ``xq @ wc`` per tile, DESIGN.md §14).
+    The checksum is computed from the *clean* plane, i.e. from what
+    software intended to program — that is precisely how stuck bitcells
+    become detectable.
+
+    ``fault`` with ``stuck_rate > 0`` then masks each dense plane with
+    deterministic stuck-at bitcells (``core.faults.stuck_bit_plane``, keyed
+    per plane in walk order off ``fault.seed``). Because the fault lives in
+    the deployed operand, the Pallas fused kernel consumes it unchanged —
+    faulted-kernel vs faulted-oracle stays bit-identical. MoE expert banks
+    are exempt from both (``_expert_dense`` routes per token; the per-tile
+    checksum contract and the guard's dense-plane lookup don't apply —
+    documented limitation).
     """
     if policy is None:
         policy = get_policy(cfg.cim.policy)
     if policy is None:
         return params
     dtype = jnp.dtype(cfg.dtype)
+    fault_key = (jax.random.PRNGKey(fault.seed)
+                 if fault is not None and fault.stuck_rate > 0.0 else None)
+    plane_idx = [0]   # running walk-order index -> per-plane fault key
 
     def walk(node, name, parent):
         if not isinstance(node, dict):
@@ -118,8 +140,17 @@ def deploy(cfg: ModelConfig, params: Any,
             # w after .astype(x.dtype) (== cfg dtype), so quantize that view
             wq, ws = quantize_plane(node["w"].astype(dtype), spec.w_bits,
                                     reduce_axes=2)
-            return dict(node, **{f"wq{spec.w_bits}": wq,
-                                 f"ws{spec.w_bits}": ws})
+            extra = {f"wq{spec.w_bits}": wq, f"ws{spec.w_bits}": ws}
+            if guard:
+                # checksum of the *clean* plane (pre-fault): sum over the
+                # output-column axis, per layer slice
+                extra[f"wc{spec.w_bits}"] = wq.astype(jnp.int32).sum(axis=-1)
+            if fault_key is not None:
+                extra[f"wq{spec.w_bits}"] = stuck_bit_plane(
+                    wq, spec.w_bits, fault.stuck_rate,
+                    jax.random.fold_in(fault_key, plane_idx[0]))
+                plane_idx[0] += 1
+            return dict(node, **extra)
         out = {k: walk(v, k, name) for k, v in node.items()}
         if any(b in node for b in _EXPERT_BANKS):
             spec = policy.spec_for_role("moe_expert")

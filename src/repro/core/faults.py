@@ -1,0 +1,206 @@
+"""Deterministic structural-fault injection for the CR-CIM sim (DESIGN.md §14).
+
+The noise model in ``core/adc.py`` covers the macro's *well-behaved*
+non-idealities (comparator noise, cap mismatch INL, DNL). Real silicon also
+fails structurally, and those failure modes are what the guard/degradation
+machinery (``core/guard.py``, the serving ladder) must be stressed against:
+
+  * **stuck-at bitcells** — SRAM cells latched at 0/1; the deployed int8
+    weight plane differs from what software programmed. Applied once at
+    deploy time (``core.deploy.deploy(fault=...)``) so both the behavioural
+    jnp path and the Pallas kernel consume the *faulted plane* with zero
+    kernel changes — the fault composes with ``cim_matmul_fused_pallas``
+    bit-for-bit because it lives in the operand, not the op.
+  * **per-column gain / offset drift** — readout-chain mismatch drift; a
+    multiplicative gain error and an additive offset per output column.
+  * **ADC stuck-code** — a column's SAR ADC latches and returns one code
+    for every conversion. One ADC serves one column, so this is a
+    *per-column* fault (same columns in every K-tile / bit-plane).
+  * **vote-count brownouts** — transient supply droop collapses the CB
+    majority vote from ``mv_votes`` to ``brownout_votes`` for a random
+    subset of conversions (per call, keyed on the caller's PRNG key).
+  * **transient disturbance** (``transient_mag``) — an engine-injected
+    per-row analog disturbance, in units of the layer's output noise std;
+    the serving engine uses it to drive a targeted hard fault into chosen
+    slots for the end-to-end degradation test.
+
+Every fault is a *deterministic function of (FaultSpec.seed, position)* —
+same seed, same faults, independent of batching — so the jnp oracles in
+``kernels/ref.py`` reproduce each injection bit for bit.
+
+This module imports only ``quant``/``prng`` (``core.cim`` imports it, so it
+must not import back); callers pass derived scalars (sigma, gain, tiles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prng import threefry2x32, uniform_from_bits
+
+# Domain-separation constant for fault-event streams (see repro.core.prng:
+# tile noise and SAR decisions have their own constants; fault masks must
+# never alias either even under the same key).
+DOMAIN_FAULT = 0x5D2F8A31
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault scenario (frozen — usable as a jit static).
+
+    Rates are probabilities per affected element (bitcell / column /
+    conversion); magnitudes are in the units noted. ``seed`` fixes every
+    random draw, so a scenario is exactly reproducible across the
+    behavioural path, the bit-exact path, the Pallas kernel (via the
+    deployed plane) and the ref oracles.
+    """
+
+    seed: int = 0
+    stuck_rate: float = 0.0      # per-bitcell stuck-at prob (deploy-time)
+    col_gain_std: float = 0.0    # per-column multiplicative gain drift std
+    col_offset_std: float = 0.0  # per-column additive offset std, in units
+                                 # of the layer's output noise std
+    brownout_rate: float = 0.0   # per-conversion prob of CB vote collapse
+    brownout_votes: int = 1     # votes remaining during a brownout
+    adc_stuck_rate: float = 0.0  # per-column prob the SAR ADC is stuck
+    adc_stuck_code: int = 0      # code a stuck ADC emits for every conversion
+    transient_mag: float = 0.0   # engine-injected per-row disturbance, in
+                                 # units of the layer's output noise std
+
+    def any_output_fault(self) -> bool:
+        """True if the output-referred runtime faults are active (the ones
+        applied per matmul output, vs the deploy-time stuck bits)."""
+        return (self.col_gain_std > 0.0 or self.col_offset_std > 0.0
+                or self.adc_stuck_rate > 0.0 or self.brownout_rate > 0.0)
+
+
+# ---------------------------------------------------------------------------
+# deploy-time: stuck-at bitcells
+# ---------------------------------------------------------------------------
+
+
+def stuck_bit_plane(wq: jnp.ndarray, bits: int, rate: float,
+                    key: jax.Array) -> jnp.ndarray:
+    """Force a Bernoulli(rate) subset of two's-complement bits to random 0/1.
+
+    ``wq``: signed int weights in [-qmax, qmax], any shape/int dtype. Each of
+    the ``bits`` stored bit planes loses ``rate`` of its cells to a stuck
+    value drawn fair-coin per cell. The reassembled signed value may reach
+    ``-2^(bits-1)`` (a stuck MSB on a zero weight) — physically faithful, so
+    it is *not* clipped back to the symmetric range.
+    """
+    if rate <= 0.0:
+        return wq
+    u = jnp.mod(wq.astype(jnp.int32), 2 ** bits)
+    out = jnp.zeros_like(u)
+    for i in range(bits):
+        ki = jax.random.fold_in(key, i)
+        km, kv = jax.random.split(ki)
+        stuck = jax.random.uniform(km, wq.shape) < rate
+        val = jax.random.uniform(kv, wq.shape) < 0.5
+        bit = jnp.where(stuck, val.astype(jnp.int32), (u >> i) & 1)
+        out = out + (bit << i)
+    signed = out - (out >= 2 ** (bits - 1)).astype(jnp.int32) * (2 ** bits)
+    return signed.astype(wq.dtype)
+
+
+# ---------------------------------------------------------------------------
+# static per-column fault realisations (functions of seed + column only)
+# ---------------------------------------------------------------------------
+
+
+def column_gain(fault: FaultSpec, n: int) -> Optional[jnp.ndarray]:
+    """(N,) multiplicative readout gain per column, or None when inactive."""
+    if fault.col_gain_std <= 0.0:
+        return None
+    z = jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(fault.seed), 1), (n,))
+    return 1.0 + fault.col_gain_std * z
+
+
+def column_offset_z(fault: FaultSpec, n: int) -> Optional[jnp.ndarray]:
+    """(N,) standard-normal offset realisation per column (caller scales by
+    ``col_offset_std * sigma``), or None when inactive."""
+    if fault.col_offset_std <= 0.0:
+        return None
+    return jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(fault.seed), 2), (n,))
+
+
+def adc_stuck_cols(fault: FaultSpec, n: int) -> Optional[jnp.ndarray]:
+    """(N,) bool mask of columns whose ADC is stuck, or None when inactive.
+
+    Threefry keyed on (seed ^ DOMAIN_FAULT) with the *global column index*
+    as counter: the same columns are stuck in every tile, plane, call and
+    code path (bit-exact, behavioural, kernel epilogue, ref oracle).
+    """
+    if fault.adc_stuck_rate <= 0.0:
+        return None
+    bits, _ = threefry2x32(
+        jnp.uint32(fault.seed) ^ jnp.uint32(DOMAIN_FAULT), jnp.uint32(3),
+        jnp.arange(n, dtype=jnp.uint32), jnp.uint32(0))
+    return uniform_from_bits(bits) < fault.adc_stuck_rate
+
+
+def brownout_mask(fault: FaultSpec, k0: jnp.ndarray, k1: jnp.ndarray,
+                  idx: jnp.ndarray) -> jnp.ndarray:
+    """Per-conversion brownout events for one ``sar_convert`` call.
+
+    Transient: keyed on the *call's* PRNG key words (xored with the fault
+    domain and seed) so different calls brown out different conversions,
+    while any oracle holding the same key reproduces the draw exactly.
+    ``idx``: flat conversion index (uint32).
+    """
+    bits, _ = threefry2x32(
+        k0 ^ jnp.uint32(DOMAIN_FAULT), k1 ^ jnp.uint32(fault.seed),
+        idx, jnp.uint32(0xB0))
+    return uniform_from_bits(bits) < fault.brownout_rate
+
+
+# ---------------------------------------------------------------------------
+# output-referred runtime fault application (shared by behavioural + kernel)
+# ---------------------------------------------------------------------------
+
+
+def apply_output_faults(
+    y: jnp.ndarray,
+    fault: FaultSpec,
+    sigma,
+    stuck_value,
+    brownout_extra_std,
+    key: Optional[jax.Array] = None,
+) -> jnp.ndarray:
+    """Apply the per-column runtime faults to a matmul output ``y`` (..., N).
+
+    ``sigma``: the layer's fault-free output noise std *in y's units*
+    (scalar, possibly traced — dequantized callers fold their scale in).
+    ``stuck_value``: the output value (y's units) a stuck-ADC column
+    produces (every conversion of the column returns ``adc_stuck_code``;
+    the caller folds tiles/planes/gain into this one scalar).
+    ``brownout_extra_std``: extra Gaussian std (y's units) equivalent to the
+    brownout-degraded conversion variance — the behavioural stand-in for
+    vote-collapse (the bit-exact path mixes votes per conversion instead;
+    only consulted when ``fault.brownout_rate > 0`` and a key is given).
+
+    Order matters and mirrors the physical chain: gain/offset act on the
+    readout (stuck bits already happened in the operand), the stuck ADC
+    *replaces* the column output after them.
+    """
+    n = y.shape[-1]
+    g = column_gain(fault, n)
+    if g is not None:
+        y = y * g
+    z = column_offset_z(fault, n)
+    if z is not None:
+        y = y + (fault.col_offset_std * sigma) * z
+    if fault.brownout_rate > 0.0 and key is not None:
+        y = y + brownout_extra_std * jax.random.normal(key, y.shape,
+                                                       jnp.float32)
+    stuck = adc_stuck_cols(fault, n)
+    if stuck is not None:
+        y = jnp.where(stuck, jnp.asarray(stuck_value, jnp.float32), y)
+    return y

@@ -1,0 +1,163 @@
+"""ABFT checksum guard for CIM-routed matmuls (DESIGN.md §14).
+
+Algorithm-based fault tolerance, Huang–Abraham style, adapted to the
+macro's noise floor: at deploy time ``core.deploy`` attaches to every
+CIM-routed weight plane a checksum column ``wc = sum_n wq[:, n]`` (int32,
+computed from the *clean* plane — from what software intended to program,
+which is exactly why stuck bitcells are detectable). At run time the guard
+compares, per output row position,
+
+    s   = sum_n y_analog[..., n]          (the analog column sum)
+    chk = (xq @ wc) * xs * ws             (the digital checksum, exact:
+                                           integer dot in f32 under 2^24)
+
+The macro's healthy error per output element has std
+``output_noise_std_int(spec, K)`` (integer units), so ``s - chk`` has std
+``sqrt(N)`` times that; the trip threshold is ``threshold_sigmas`` of this
+noise-calibrated scale (plus a small relative floor for f32 summation
+rounding, which also keeps the sigma -> 0 degenerate case sane). At the
+default 6 sigma the zero-fault false-trip probability per position is
+~1e-9 — the CI floor (``check_floors.py faults``) bounds the measured rate
+at 1%.
+
+On trip, the *degradation ladder* escalates in-graph (fixed shapes — every
+rung is computed and selected with ``where``; guard mode trades roughly 3x
+the layer matmul FLOPs for detection + recovery):
+
+  rung 1  re-read the tile with boosted majority voting (``retry_votes``
+          CB votes — the paper's energy/robustness knob turned up) and
+          re-check;
+  rung 2  rows still tripping after the retry are *hard* faults: recompute
+          digitally (``x @ w`` — bit-identical to the ``cim='off'`` path)
+          and report them so the serving engine can pin the (slot, layer)
+          to digital for the rest of the request (``serving.engine``).
+
+Per-layer trip/hard counters ride out of the jitted step through the layer
+scan (``models.transformer._scan_blocks``) as ``(L, B)`` arrays on the Ctx.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.cim import CIMSpec, cim_dense, output_noise_std_int
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardSpec:
+    """ABFT guard operating point (frozen — rides on Ctx into jitted code)."""
+
+    threshold_sigmas: float = 6.0  # trip at this many noise sigmas
+    retry_votes: int = 12          # rung-1 CB majority votes for the re-read
+    rel_floor: float = 1e-5        # f32-rounding floor, relative to |chk|+|s|
+
+
+def checksum_trips(y: jnp.ndarray, xq: jnp.ndarray, wc: jnp.ndarray,
+                   unit, sigma_deq, gs: GuardSpec) -> jnp.ndarray:
+    """Per-row-position trip decision for one guarded matmul.
+
+    ``y``: (..., N) dequantized analog output; ``xq``: (..., K) int32
+    activations; ``wc``: (K,) int32 checksum column; ``unit``: the dequant
+    scale ``xs * ws`` (scalar); ``sigma_deq``: healthy per-element output
+    noise std in y's units. Returns (...,) bool.
+    """
+    n = y.shape[-1]
+    chk = jnp.einsum("...k,k->...", xq.astype(jnp.float32),
+                     wc.astype(jnp.float32),
+                     precision=jax.lax.Precision.HIGHEST) * unit
+    s = jnp.sum(y.astype(jnp.float32), axis=-1)
+    tau = (gs.threshold_sigmas * math.sqrt(n) * sigma_deq
+           + gs.rel_floor * (jnp.abs(chk) + jnp.abs(s)))
+    return jnp.abs(s - chk) > tau
+
+
+def _retry_spec(spec: CIMSpec, gs: GuardSpec) -> CIMSpec:
+    """Rung-1 operating point: CB on, majority votes boosted."""
+    return dataclasses.replace(
+        spec, cb=True,
+        adc=dataclasses.replace(spec.adc, mv_votes=gs.retry_votes))
+
+
+def guarded_dense(ctx, p, x: jnp.ndarray, spec: CIMSpec,
+                  key: Optional[jax.Array],
+                  xs: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Checksum-guarded deployed sim-mode dense with the degradation ladder.
+
+    Drop-in replacement for the deployed branch of ``layers.dense`` (bias
+    is added by the caller). Appends per-row trip/hard counts to
+    ``ctx.trip_log`` / ``ctx.hard_log`` when those lists are present (the
+    layer scan drains them into ``(L, B)`` counters).
+
+    Key discipline: the rung-1 re-read folds a constant off ``key`` rather
+    than consuming ``ctx.next_key()``, so the layer key stream — and hence
+    every *other* slot's noise realisation — is bit-identical between
+    guarded and unguarded runs (the end-to-end isolation test relies on
+    this).
+    """
+    gs = ctx.guard
+    wq = p[f"wq{spec.w_bits}"]
+    ws = p[f"ws{spec.w_bits}"]
+    wc = p[f"wc{spec.w_bits}"]
+    k = x.shape[-1]
+    if xs is None:
+        xs = quant.abs_max_scale(x, spec.in_bits)
+    xq = quant.quantize(x.astype(jnp.float32), xs, spec.in_bits)
+    unit = jnp.asarray(ws, jnp.float32) * xs
+    sigma_deq = output_noise_std_int(spec, k) * unit
+
+    def run(sp: CIMSpec, kk):
+        if ctx.cfg.cim.use_kernel:
+            from repro.kernels import ops as kops
+            return kops.cim_matmul_deployed(x, wq, ws, sp, kk,
+                                            x_scale=xs).astype(x.dtype)
+        return cim_dense(x, None, sp, kk, mode="sim", x_scale=xs,
+                         w_scale=ws, wq=wq)
+
+    # engine-injected transient disturbance (FaultSpec.transient_mag, per
+    # fault row): a hard analog fault — it corrupts the first read AND the
+    # rung-1 re-read, but of course not the digital recompute
+    dist = None
+    if (ctx.fault is not None and ctx.fault.transient_mag > 0.0
+            and ctx.fault_rows is not None and x.ndim >= 2):
+        rows = ctx.fault_rows.reshape(
+            ctx.fault_rows.shape[:1] + (1,) * (x.ndim - 1))
+        dist = jnp.where(rows, ctx.fault.transient_mag * sigma_deq, 0.0)
+
+    y0 = run(spec, key)
+    if dist is not None:
+        y0 = y0 + dist
+    trip0 = checksum_trips(y0, xq, wc, unit, sigma_deq, gs)
+
+    # rung 1: boosted-vote re-read, re-checked at its own (lower) noise
+    rspec = _retry_spec(spec, gs)
+    y1 = run(rspec, None if key is None else jax.random.fold_in(key, 0x9E77))
+    if dist is not None:
+        y1 = y1 + dist
+    sigma1 = output_noise_std_int(rspec, k) * unit
+    trip1 = checksum_trips(y1, xq, wc, unit, sigma1, gs)
+    y = jnp.where(trip0[..., None], y1, y0)
+
+    # rung 2: digital recompute — bit-identical to the cim="off" einsum
+    y_dig = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    hard = trip0 & trip1
+    y = jnp.where(hard[..., None], y_dig, y)
+
+    # engine-pinned rows bypass the macro entirely (and stop counting)
+    if ctx.pin_rows is not None and x.ndim >= 2:
+        pin = ctx.pin_rows.reshape(
+            ctx.pin_rows.shape[:1] + (1,) * (x.ndim - 2))
+        y = jnp.where(pin[..., None], y_dig, y)
+        trip0 = trip0 & ~pin
+        hard = hard & ~pin
+
+    if ctx.trip_log is not None:
+        axes = tuple(range(1, trip0.ndim))
+        ctx.trip_log.append(jnp.sum(trip0.astype(jnp.int32), axis=axes))
+        ctx.hard_log.append(jnp.sum(hard.astype(jnp.int32), axis=axes))
+    return y

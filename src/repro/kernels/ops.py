@@ -40,7 +40,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.core.cim import CIMSpec, output_noise_std_int_per_tile
+from repro.core.cim import (
+    CIMSpec,
+    adc_stuck_value_int,
+    brownout_extra_std_int,
+    output_noise_std_int,
+    output_noise_std_int_per_tile,
+)
+from repro.core.faults import apply_output_faults
 from repro.core.prng import seed_from_key
 from repro.kernels import ref
 from repro.kernels.cim_matmul import (
@@ -134,6 +141,14 @@ def cim_matmul_deployed(
     is the resident plane the macro was programmed with (``core.deploy``).
     Serving-only by design: no custom VJP (QAT differentiates through the
     f32 weight path).
+
+    ``spec.fault`` runtime faults (DESIGN.md §14) apply in the epilogue,
+    *outside* the kernel: stuck-at bitcells already live in the deployed
+    ``wq`` plane (so the kernel itself needs no fault path and keeps
+    bit-identity with its oracle), and the per-column gain/offset drift,
+    stuck-ADC replacement and brownout surrogate act on the dequantized
+    output with the same realisations as ``cim_matmul_behavioral`` —
+    scaled into dequant units by ``x_scale * ws``.
     """
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1]).astype(jnp.float32)
@@ -148,6 +163,14 @@ def cim_matmul_deployed(
     y = cim_matmul_fused_int(
         x2, wq, xs, seed, sigma, spec.in_bits, spec.macro_rows,
         scale=xs * jnp.asarray(ws, jnp.float32), force=force)
+    f = spec.fault
+    if f is not None and f.any_output_fault():
+        unit = (xs * jnp.asarray(ws, jnp.float32)).reshape(-1)[0]
+        y = apply_output_faults(
+            y, f, output_noise_std_int(spec, k) * unit,
+            adc_stuck_value_int(spec, k) * unit,
+            brownout_extra_std_int(spec, k) * unit,
+            key=(None if key is None else jax.random.fold_in(key, 0x0FA1)))
     return y.reshape(orig_shape[:-1] + (n,))
 
 

@@ -331,3 +331,132 @@ def flash_gqa_ref(q, k, v, start=None, ks=None, vs=None):
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", p, vf)
     return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fault-injection oracles (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+#
+# Every structural fault in ``core.faults`` is a deterministic function of
+# (FaultSpec.seed, position). The oracles below reconstruct each realisation
+# independently (different code shape, same draw contract) so a test failure
+# means the *contract* drifted, not that two call sites share a bug.
+
+
+def stuck_bit_plane_ref(wq: jnp.ndarray, bits: int, rate: float,
+                        key: jax.Array) -> jnp.ndarray:
+    """Independent reconstruction of ``core.faults.stuck_bit_plane``.
+
+    Same draws (fold_in(key, bit) -> split -> two uniforms) but applied by
+    masked clear/set on the unsigned view instead of plane reassembly.
+    """
+    if rate <= 0.0:
+        return wq
+    u = jnp.mod(wq.astype(jnp.int32), 2 ** bits)
+    for i in range(bits):
+        ki = jax.random.fold_in(key, i)
+        km, kv = jax.random.split(ki)
+        stuck = jax.random.uniform(km, wq.shape) < rate
+        val = (jax.random.uniform(kv, wq.shape) < 0.5).astype(jnp.int32)
+        forced = (u & ~(1 << i)) | (val << i)
+        u = jnp.where(stuck, forced, u)
+    signed = jnp.where(u >= 2 ** (bits - 1), u - 2 ** bits, u)
+    return signed.astype(wq.dtype)
+
+
+def sar_convert_fault_ref(v: jnp.ndarray, key: jax.Array, spec: ADCSpec,
+                          cb: bool, fault) -> jnp.ndarray:
+    """Bit-for-bit oracle for ``adc.sar_convert(..., fault=...)``.
+
+    Reconstructs the analytic SAR loop with the two conversion-level faults
+    spelled out per conversion: the brownout mask selects the
+    ``brownout_votes`` majority probability for browned conversions, and
+    stuck-ADC columns (global column index = last axis) overwrite the final
+    code. Uses the live ``decision_prob``/``majority_prob`` (the probability
+    math is oracled separately in tests/test_adc.py) but draws its own
+    threefry streams.
+    """
+    from repro.core.adc import _dnl_shift, decision_prob, majority_prob
+    from repro.core.faults import DOMAIN_FAULT
+    from repro.core.prng import (
+        DOMAIN_SAR, key_words, threefry2x32, uniform_from_bits,
+    )
+
+    w = dac_bit_weights(spec)
+    vshape = v.shape
+    vf = _dnl_shift(v.reshape(-1), spec)
+    k0, k1 = key_words(key)
+    k0 = k0 ^ jnp.uint32(DOMAIN_SAR)
+    idx = jax.lax.iota(jnp.uint32, vf.shape[0])
+
+    brown = None
+    if fault is not None and fault.brownout_rate > 0.0 and cb:
+        bbits, _ = threefry2x32(
+            k0 ^ jnp.uint32(DOMAIN_FAULT), k1 ^ jnp.uint32(fault.seed),
+            idx, jnp.uint32(0xB0))
+        brown = uniform_from_bits(bbits) < fault.brownout_rate
+
+    n_coarse = spec.adc_bits - spec.mv_bits
+    code = jnp.zeros_like(vf, dtype=jnp.int32)
+    level = jnp.zeros_like(vf)
+    for step in range(spec.adc_bits):
+        fine = step >= n_coarse
+        sigma = spec.sigma_cmp if fine else spec.coarse_frac * spec.sigma_cmp
+        p_glitch = spec.p_glitch if fine else 0.0
+        votes = (spec.mv_votes if cb else 1) if fine else 1
+        b = spec.adc_bits - 1 - step
+        trial = level + w[b]
+        bits, _ = threefry2x32(k0, k1, idx, jnp.uint32(step))
+        u = uniform_from_bits(bits)
+        p1 = decision_prob(vf - trial, sigma, p_glitch, spec.glitch_mag)
+        p = majority_prob(p1, votes)
+        if brown is not None and votes > 1:
+            p = jnp.where(brown, majority_prob(p1, fault.brownout_votes), p)
+        bit = u < p
+        code = code + bit.astype(jnp.int32) * (1 << b)
+        level = jnp.where(bit, trial, level)
+    code = code.reshape(vshape)
+    if fault is not None and fault.adc_stuck_rate > 0.0 and code.ndim >= 1:
+        sbits, _ = threefry2x32(
+            jnp.uint32(fault.seed) ^ jnp.uint32(DOMAIN_FAULT), jnp.uint32(3),
+            jnp.arange(vshape[-1], dtype=jnp.uint32), jnp.uint32(0))
+        stuck = uniform_from_bits(sbits) < fault.adc_stuck_rate
+        code = jnp.where(stuck, jnp.int32(fault.adc_stuck_code), code)
+    return code
+
+
+def apply_output_faults_ref(y: jnp.ndarray, fault, sigma, stuck_value,
+                            brownout_extra_std,
+                            key=None) -> jnp.ndarray:
+    """Bit-for-bit oracle for ``core.faults.apply_output_faults``.
+
+    Reconstructs the per-column realisations (gain: fold_in(seed-key, 1);
+    offset: fold_in(seed-key, 2); stuck cols: threefry(seed ^ DOMAIN_FAULT,
+    3) over the global column index) and applies them in one fused
+    expression in the same physical order: gain -> offset -> brownout
+    surrogate -> stuck replacement.
+    """
+    from repro.core.faults import DOMAIN_FAULT
+    from repro.core.prng import threefry2x32, uniform_from_bits
+
+    n = y.shape[-1]
+    base = jax.random.PRNGKey(fault.seed)
+    g = jnp.ones((n,), jnp.float32)
+    if fault.col_gain_std > 0.0:
+        g = 1.0 + fault.col_gain_std * jax.random.normal(
+            jax.random.fold_in(base, 1), (n,))
+    off = jnp.zeros((n,), jnp.float32)
+    if fault.col_offset_std > 0.0:
+        off = (fault.col_offset_std * sigma) * jax.random.normal(
+            jax.random.fold_in(base, 2), (n,))
+    out = y * g + off
+    if fault.brownout_rate > 0.0 and key is not None:
+        out = out + brownout_extra_std * jax.random.normal(key, y.shape,
+                                                           jnp.float32)
+    if fault.adc_stuck_rate > 0.0:
+        bits, _ = threefry2x32(
+            jnp.uint32(fault.seed) ^ jnp.uint32(DOMAIN_FAULT), jnp.uint32(3),
+            jnp.arange(n, dtype=jnp.uint32), jnp.uint32(0))
+        stuck = uniform_from_bits(bits) < fault.adc_stuck_rate
+        out = jnp.where(stuck, jnp.asarray(stuck_value, jnp.float32), out)
+    return out

@@ -24,6 +24,13 @@ cache capacity. The default einsum path is the bit-stable reference.
 construction (core.deploy, DESIGN.md §12) — the macro's weight-stationary
 contract: weights quantize once per engine, not once per token per layer.
 ``--deploy off`` serves the PR 3 per-call-quantization path for comparison.
+
+``--guard`` (sim mode, fused engine) runs every CIM matmul under the ABFT
+checksum guard with the degradation ladder (DESIGN.md §14) and prints the
+per-layer trip/hard counters after the run. ``--fault-stuck`` /
+``--fault-transient`` / ``--fault-slot`` inject a deterministic fault
+scenario to watch the ladder work; ``--fail-after`` arms the request-fail
+rung (failed requests print as FAILED, the batch keeps going).
 """
 
 from __future__ import annotations
@@ -75,6 +82,27 @@ def main():
              "per decode step, the production TPU path; runs in interpret "
              "mode on CPU); 'einsum' = dense masked-softmax reference; "
              "'config' defers to the arch config (default einsum)")
+    ap.add_argument(
+        "--guard", action="store_true",
+        help="ABFT checksum guard + degradation ladder on every CIM matmul "
+             "(fused engine, --cim sim only; DESIGN.md §14)")
+    ap.add_argument(
+        "--fault-stuck", type=float, default=0.0,
+        help="stuck-at bitcell rate applied to the deployed weight planes")
+    ap.add_argument(
+        "--fault-transient", type=float, default=0.0,
+        help="transient disturbance magnitude (units of layer output noise "
+             "std) injected into the slots named by --fault-slot")
+    ap.add_argument(
+        "--fault-slot", type=int, action="append", default=None,
+        help="slot index hit by the transient fault (repeatable)")
+    ap.add_argument(
+        "--fault-seed", type=int, default=0,
+        help="fault scenario seed (deterministic realisations)")
+    ap.add_argument(
+        "--fail-after", type=int, default=0,
+        help="fail a request after this many hard-tripping steps "
+             "(0 = never fail; keep serving on the digital recompute)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -94,6 +122,22 @@ def main():
         engine_kw["chunk_size"] = (None if args.chunk_size == -1
                                    else args.chunk_size)
         engine_kw["record_ttft"] = args.ttft
+        if args.guard:
+            from repro.serving.engine import DegradePolicy
+            engine_kw["guard"] = True
+            if args.fail_after > 0:
+                engine_kw["degrade"] = DegradePolicy(
+                    pin_after=1, fail_after=args.fail_after)
+        if args.fault_stuck > 0.0 or args.fault_transient > 0.0:
+            from repro.core.faults import FaultSpec
+            engine_kw["fault"] = FaultSpec(
+                seed=args.fault_seed, stuck_rate=args.fault_stuck,
+                transient_mag=args.fault_transient)
+            engine_kw["fault_slots"] = args.fault_slot or ()
+    elif args.guard or args.fault_stuck or args.fault_transient:
+        raise SystemExit("--guard/--fault-* need the fused engine "
+                         "(--engine fused): the loop reference engine has "
+                         "no guard path")
     engine = engine_cls(cfg, params, max_slots=args.slots,
                         max_len=args.prompt_len + args.new_tokens + 8,
                         **engine_kw)
@@ -111,9 +155,20 @@ def main():
     t0 = time.time()
     outs = engine.generate(reqs)
     dt = time.time() - t0
-    total_tokens = sum(len(o) for o in outs)
-    print(f"[{args.engine}] served {len(reqs)} requests, {total_tokens} "
-          f"tokens in {dt:.1f}s ({total_tokens / dt:.1f} tok/s)")
+    total_tokens = sum(len(o) for o in outs if o is not None)
+    n_failed = sum(o is None for o in outs)
+    print(f"[{args.engine}] served {len(reqs)} requests "
+          f"({n_failed} failed), {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens / dt:.1f} tok/s)")
+    if getattr(engine, "guard", None) is not None:
+        trips = engine.guard_trip_counts
+        hard = engine.guard_hard_counts
+        print(f"  guard: per-layer trips {trips.tolist()} / "
+              f"hard {hard.tolist()} "
+              f"(total {int(trips.sum())}/{int(hard.sum())})")
+        for i, err in enumerate(engine.request_errors):
+            if err is not None:
+                print(f"  req{i}: FAILED — {err}")
     ttfts = [t for t in getattr(engine, "ttft_s", []) if t is not None]
     if ttfts:
         print(f"  TTFT mean {np.mean(ttfts) * 1e3:.0f} ms / "
@@ -121,7 +176,7 @@ def main():
               f"({engine.prefill_traces} prefill traces, "
               f"chunk={engine.chunk_size})")
     for i, o in enumerate(outs[:4]):
-        print(f"  req{i}: {o[:10]}...")
+        print(f"  req{i}: " + ("FAILED" if o is None else f"{o[:10]}..."))
 
 
 if __name__ == "__main__":

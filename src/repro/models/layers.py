@@ -34,6 +34,16 @@ class Ctx:
     every CIM-routed role instead of silently falling back to per-call
     weight quantization — a missing plane is a deploy/policy mismatch, not a
     slow path.
+
+    Robustness fields (DESIGN.md §14): ``guard`` routes every deployed
+    CIM dense with a ``wc<bits>`` checksum plane through
+    ``core.guard.guarded_dense``; ``fault`` threads a runtime
+    ``core.faults.FaultSpec`` into each layer's CIMSpec (stuck-at planes
+    act earlier, at deploy time). ``fault_rows`` / ``pin_rows`` are (B,)
+    bool batch-row masks (transient-disturbance targets / engine-pinned
+    digital rows); ``trip_log`` / ``hard_log`` are per-layer scratch lists
+    the guard appends (B,) trip counts to — ``transformer._scan_blocks``
+    drains them into the (L, B) ``guard_trips`` / ``guard_hard`` outputs.
     """
 
     cfg: ModelConfig
@@ -42,14 +52,25 @@ class Ctx:
     key: Optional[jax.Array] = None
     counter: int = 0
     deployed: bool = False
+    guard: Optional[Any] = None       # core.guard.GuardSpec
+    fault: Optional[Any] = None       # core.faults.FaultSpec (runtime part)
+    fault_rows: Optional[jnp.ndarray] = None   # (B,) bool
+    pin_rows: Optional[jnp.ndarray] = None     # (B,) bool, set per layer
+    pin_layers: Optional[jnp.ndarray] = None   # (B, L) bool
+    trip_log: Optional[list] = None
+    hard_log: Optional[list] = None
+    guard_trips: Optional[jnp.ndarray] = None  # (L, B) int32, set by scan
+    guard_hard: Optional[jnp.ndarray] = None   # (L, B) int32
 
     @classmethod
     def make(cls, cfg: ModelConfig, key: Optional[jax.Array] = None,
-             mode: Optional[str] = None, deployed: bool = False) -> "Ctx":
+             mode: Optional[str] = None, deployed: bool = False,
+             guard: Optional[Any] = None,
+             fault: Optional[Any] = None) -> "Ctx":
         mode = cfg.cim.mode if mode is None else mode
         policy = get_policy(cfg.cim.policy) if mode != "off" else None
         return cls(cfg=cfg, mode=mode, policy=policy, key=key,
-                   deployed=deployed)
+                   deployed=deployed, guard=guard, fault=fault)
 
     def next_key(self) -> Optional[jax.Array]:
         if self.key is None:
@@ -89,8 +110,19 @@ def dense(ctx: Ctx, p: Params, x: jnp.ndarray, role: str) -> jnp.ndarray:
     if spec is None:
         y = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
     else:
+        # thread the runtime fault model into the operating point (static:
+        # FaultSpec is frozen/hashable, so jit sees one spec per config)
+        if ctx.fault is not None:
+            spec = dataclasses.replace(spec, fault=ctx.fault)
         k = ctx.next_key()
         xs = _act_scale(ctx, x, spec)
+        if (ctx.guard is not None and ctx.mode == "sim"
+                and f"wc{spec.w_bits}" in p):
+            from repro.core.guard import guarded_dense
+            y = guarded_dense(ctx, p, x, spec, k, xs)
+            if "b" in p:
+                y = y + p["b"].astype(x.dtype)
+            return y
         # the plane key carries the deployed w_bits, so a tree deployed
         # under a different policy can never be consumed at the wrong
         # bit-width — the lookup just misses

@@ -330,17 +330,36 @@ def _scan_blocks(ctx: Ctx, blocks: Params, block_fn, x, positions, caches):
     cfg = ctx.cfg
     n = jax.tree.leaves(blocks)[0].shape[0]
     base_key = ctx.key if ctx.key is not None else jax.random.PRNGKey(0)
+    guard = ctx.guard is not None
+    b = x.shape[0]
 
     def body(h, xs):
         layer_p, layer_cache, idx = xs
         lctx = dataclasses.replace(ctx, key=jax.random.fold_in(base_key, idx), counter=0)
+        if guard:
+            # fresh scratch lists per layer; guarded_dense appends (B,)
+            # trip/hard counts which we drain into the scan ys -> (L, B)
+            lctx.trip_log, lctx.hard_log = [], []
+            if ctx.pin_layers is not None:
+                lctx.pin_rows = jnp.take(ctx.pin_layers, idx, axis=1)
         h, new_cache = block_fn(lctx, layer_p, h, positions, layer_cache)
+        if guard:
+            zero = jnp.zeros((b,), jnp.int32)
+            trips = sum(lctx.trip_log, zero) if lctx.trip_log else zero
+            hard = sum(lctx.hard_log, zero) if lctx.hard_log else zero
+            return h, (new_cache, trips, hard)
         return h, new_cache
 
     if cfg.remat:
         body = jax.checkpoint(body)
-    x, new_caches = scan_or_loop(cfg, body, x, (blocks, caches, jnp.arange(n)), n)
-    return x, new_caches
+    x, ys = scan_or_loop(cfg, body, x, (blocks, caches, jnp.arange(n)), n)
+    if guard:
+        new_caches, trips, hard = ys
+        # side-channel outputs: read off the Ctx by the engine closures at
+        # trace time (the Ctx is a fresh python object per traced call)
+        ctx.guard_trips, ctx.guard_hard = trips, hard
+        return x, new_caches
+    return x, ys
 
 
 def forward(params: Params, batch: Dict[str, Any], cfg: ModelConfig,

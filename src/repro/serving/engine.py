@@ -22,6 +22,17 @@ Two engines share the ``Request`` API:
   cache per slot and one jitted decode dispatch per slot per token, with a
   host sync in ``_sample``. Kept verbatim for the fused-vs-loop equality
   test and as the baseline of ``benchmarks/serving_bench.py``.
+
+Robustness (DESIGN.md §14): the fused ``Engine`` optionally runs every
+CIM-routed matmul under the ABFT checksum guard (``guard=``, requires
+sim-mode deployed planes) and escalates per (slot, layer) on guard trips
+via ``DegradePolicy`` — the in-graph ladder (vote-boosted retry -> digital
+recompute) lives in ``core.guard``; the engine adds the *stateful* rungs:
+pinning a tripping layer of a slot to the digital path for the rest of the
+request, and failing a persistently-tripping request. Failed requests —
+whether by guard hard-fail or by a per-slot exception during prefill —
+return the ``None`` sentinel in the results list (never an exception), the
+slot is recycled, and the rest of the batch is unaffected.
 """
 
 from __future__ import annotations
@@ -50,6 +61,44 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     out_tokens: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class DegradePolicy:
+    """Stateful guard-escalation policy (host side, per (slot, layer)).
+
+    ``pin_after``: after this many hard trips (both in-graph rungs failed)
+    of a layer for a slot, pin that (slot, layer) to the digital path for
+    the rest of the request (None disables pinning). ``fail_after``: after
+    this many *steps* with any hard trip for a slot, declare the request
+    failed — its result becomes the ``None`` sentinel and the slot recycles
+    (None: never fail; keep serving on the digital recompute)."""
+
+    pin_after: Optional[int] = 1
+    fail_after: Optional[int] = None
+
+
+def _validate_requests(requests: List[Request], max_len: int) -> None:
+    """Shared request validation for both engines (satellite of PR 6: the
+    loop engine used to skip validation entirely and failed deep inside the
+    forward on bad shapes)."""
+    for i, r in enumerate(requests):
+        prompt = np.asarray(r.prompt)
+        if prompt.ndim != 1 or prompt.shape[0] < 1:
+            raise ValueError(
+                f"request {i}: prompt must be a non-empty 1-D token "
+                f"array, got shape {prompt.shape}")
+        if r.max_new_tokens < 1:
+            raise ValueError(
+                f"request {i}: max_new_tokens must be >= 1, got "
+                f"{r.max_new_tokens}")
+        total = prompt.shape[0] + r.max_new_tokens
+        if total > max_len:
+            raise ValueError(
+                f"request {i}: prompt length {prompt.shape[0]} + "
+                f"max_new_tokens {r.max_new_tokens} = {total} overflows "
+                f"the engine's max_len={max_len}; raise max_len or "
+                f"shorten the request")
 
 
 def _pow2_bucket(n: int, lo: int = 8) -> int:
@@ -98,11 +147,12 @@ def _resolve_deploy(deploy: Optional[bool], mode: str) -> bool:
     return bool(deploy)
 
 
-def _maybe_deploy(cfg: ModelConfig, params: Any, deployed: bool) -> Any:
+def _maybe_deploy(cfg: ModelConfig, params: Any, deployed: bool,
+                  fault: Any = None, guard: bool = False) -> Any:
     if not deployed:
         return params
     from repro.core.deploy import deploy as deploy_params
-    return deploy_params(cfg, params)
+    return deploy_params(cfg, params, fault=fault, guard=guard)
 
 
 def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
@@ -132,7 +182,12 @@ class Engine:
                  attn_impl: Optional[str] = None,
                  deploy: Optional[bool] = None,
                  chunk_size: Optional[int] = None,
-                 record_ttft: bool = False):
+                 record_ttft: bool = False,
+                 guard: Any = None,
+                 degrade: Optional[DegradePolicy] = None,
+                 fault: Any = None,
+                 fault_slots: Any = None,
+                 pin_slots: Any = None):
         if cfg.family == "encdec":
             raise ValueError("encdec serving needs per-request encoder "
                              "frames; the token-only engines don't carry them")
@@ -183,18 +238,61 @@ class Engine:
         # re-quantized per token per layer. Bit-identical outputs; greedy
         # tokens are unchanged (tested). deploy=False serves the PR 3 path.
         self.deployed = _resolve_deploy(deploy, mode)
-        self.params = _maybe_deploy(cfg, params, self.deployed)
+        # robustness wiring (DESIGN.md §14): guard=True -> default GuardSpec;
+        # the checksum column rides on the deployed plane, so the guard is a
+        # sim-mode + deployed feature; stuck-at faults also act at deploy
+        if guard is True:
+            from repro.core.guard import GuardSpec
+            guard = GuardSpec()
+        self.guard = guard or None
+        if self.guard is not None:
+            if mode != "sim" or not self.deployed:
+                raise ValueError(
+                    "guard requires cim_mode='sim' with deployed weight "
+                    "planes — the ABFT checksum column is attached at "
+                    "deploy time (core.deploy) and compares the *analog* "
+                    "column sum (DESIGN.md §14)")
+            if cfg.family not in ("dense", "vlm", "moe", "ssm"):
+                raise ValueError(
+                    f"guard trip export rides the stacked layer scan; "
+                    f"family '{cfg.family}' is not wired for it")
+        self.fault = fault
+        self.fault_slots = frozenset(int(s) for s in (fault_slots or ()))
+        # pin_slots: operator knob — serve these slots on the digital path
+        # from step 0 (the ladder's final rung, applied preemptively; also
+        # the bit-exact fault-free twin of a hard-faulted slot, since the
+        # batch shares one per-tensor activation scale — DESIGN.md §14)
+        self.pin_slots = frozenset(int(s) for s in (pin_slots or ()))
+        if self.pin_slots and self.guard is None:
+            raise ValueError("pin_slots requires guard: the digital bypass "
+                             "is routed by the guarded dense")
+        self.degrade = degrade if degrade is not None else (
+            DegradePolicy() if self.guard is not None else None)
+        self.guard_trip_counts = np.zeros(cfg.n_layers, np.int64)
+        self.guard_hard_counts = np.zeros(cfg.n_layers, np.int64)
+        self.request_errors: List[Optional[str]] = []
+        self.params = _maybe_deploy(cfg, params, self.deployed, fault=fault,
+                                    guard=self.guard is not None)
 
         # allocated once; recycled for the lifetime of the engine
         self.caches = tf.init_caches(cfg, max_slots, self._alloc_len)
         self.last_tok = jnp.zeros((max_slots,), jnp.int32)
         deployed = self.deployed
+        guard_on = self.guard is not None
+        gspec, fspec = self.guard, self.fault
+
+        def make_ctx(kctx, pin, frow):
+            ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed,
+                           guard=gspec, fault=fspec)
+            ctx.pin_layers = pin
+            ctx.fault_rows = frow
+            return ctx
 
         def prefill_fn(params, caches, last_tok, tokens, true_len, slot,
-                       temp, key):
+                       temp, key, pin=None, frow=None):
             """Prefill one request into its slot of the stacked cache."""
             kctx, ksamp = jax.random.split(key)
-            ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed)
+            ctx = make_ctx(kctx, pin, frow)
             # full zero reset, not just len: a 1-token prompt hits the SSM
             # *decode* branch, which reads conv/state — stale recurrent state
             # from the slot's previous occupant must not leak in
@@ -208,10 +306,13 @@ class Engine:
             caches = tf.put_slot(caches, slot_cache, slot)
             tok = _sample_tokens(last, jnp.full((1,), temp, jnp.float32),
                                  ksamp)[0]
-            return caches, last_tok.at[slot].set(tok), tok
+            out = (caches, last_tok.at[slot].set(tok), tok)
+            if guard_on:
+                out = out + (ctx.guard_trips, ctx.guard_hard)   # (L, 1) each
+            return out
 
         def prefill_chunk_fn(params, caches, last_tok, tokens, reset, valid,
-                             is_final, slot, temp, key):
+                             is_final, slot, temp, key, pin=None, frow=None):
             """Advance one slot's prefill by one fixed-shape chunk.
 
             ``tokens``: (1, chunk_size), right-padded; ``valid`` of them are
@@ -221,7 +322,7 @@ class Engine:
             exactly one compiled trace for every prompt length.
             """
             kctx, ksamp = jax.random.split(key)
-            ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed)
+            ctx = make_ctx(kctx, pin, frow)
             slot_cache = tf.take_slot(caches, slot)
             slot_cache = jax.tree.map(
                 lambda t: jnp.where(reset, jnp.zeros_like(t), t), slot_cache)
@@ -239,17 +340,23 @@ class Engine:
             tok = _sample_tokens(last, jnp.full((1,), temp, jnp.float32),
                                  ksamp)[0]
             keep = jnp.where(is_final, tok, last_tok[slot])
-            return caches, last_tok.at[slot].set(keep), tok
+            out = (caches, last_tok.at[slot].set(keep), tok)
+            if guard_on:
+                out = out + (ctx.guard_trips, ctx.guard_hard)
+            return out
 
-        def decode_fn(params, caches, last_tok, active, temps, key):
+        def decode_fn(params, caches, last_tok, active, temps, key,
+                      pin=None, frow=None):
             """One fused step: every active slot emits its next token."""
             kctx, ksamp = jax.random.split(key)
-            ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed)
+            ctx = make_ctx(kctx, pin, frow)
             logits, new_caches = tf.forward(
                 params, {"tokens": last_tok[:, None]}, cfg, ctx, caches)
             toks = _sample_tokens(logits[:, -1], temps, ksamp)
             toks = jnp.where(active, toks, last_tok)
             new_caches = tf.mask_cache_advance(new_caches, caches, active)
+            if guard_on:
+                return new_caches, toks, ctx.guard_trips, ctx.guard_hard
             return new_caches, toks
 
         # donate only the cache: last_tok/toks arrays stay referenced by the
@@ -270,8 +377,17 @@ class Engine:
             return -1
         return sum(sizes)
 
-    def generate(self, requests: List[Request]) -> List[List[int]]:
-        """Run all requests to completion; returns generated token lists."""
+    def generate(self, requests: List[Request]) -> List[Optional[List[int]]]:
+        """Run all requests to completion; returns generated token lists.
+
+        Per-request failure contract (DESIGN.md §14): a request aborted by a
+        per-slot exception during prefill or by the guard's ``fail_after``
+        escalation yields the ``None`` sentinel at its position — callers
+        never see an exception for a single bad request, and the remaining
+        slots finish unaffected (``self.request_errors`` carries the reason
+        strings). A decode-phase exception still raises: the decode step is
+        batch-global, so there is no per-slot blame to assign.
+        """
         self._validate(requests)
         t_gen0 = time.perf_counter()
         self.ttft_s = [None] * len(requests)
@@ -287,6 +403,62 @@ class Engine:
         # emitted tokens stay on device until drained:
         # ("p", scalar_dev_tok, req_idx) | ("d", (B,) dev_toks, per-slot idx)
         pend: List[Tuple[str, Any, Any]] = []
+
+        guard_on = self.guard is not None
+        n_layers = self.cfg.n_layers
+        # host-side degradation state, per (slot, layer); reset on recycle
+        pinned = np.zeros((self.max_slots, n_layers), bool)
+        for s in self.pin_slots:
+            pinned[s] = True
+        hard_counts = np.zeros((self.max_slots, n_layers), np.int64)
+        fail_steps = np.zeros(self.max_slots, np.int64)
+        failed = [False] * len(requests)
+        self.request_errors = [None] * len(requests)
+        frow_host = np.array([s in self.fault_slots
+                              for s in range(self.max_slots)])
+
+        def reset_slot_guard(s: int) -> None:
+            pinned[s] = s in self.pin_slots
+            hard_counts[s] = 0
+            fail_steps[s] = 0
+
+        def fail_request(s: int, reason: str) -> None:
+            r = slots[s]
+            ri = req_index[id(r)]
+            failed[ri] = True
+            self.request_errors[ri] = reason
+            slots[s] = None
+            decoding[s] = False
+            counts[s] = 0
+            offsets[s] = 0
+            reset_slot_guard(s)
+
+        def note_guard(trips, hard, slot_cols) -> List[int]:
+            """Fold one step's (L, B) guard counters into the host state.
+
+            slot_cols: [(slot, column-in-B)] mapping for this call (prefill
+            reports a single batch-1 column; decode reports all slots).
+            Returns slots whose request just crossed ``fail_after``.
+            """
+            t, h = jax.device_get((trips, hard))
+            t = np.asarray(t)
+            h = np.asarray(h)
+            self.guard_trip_counts += t.sum(axis=1).astype(np.int64)
+            self.guard_hard_counts += h.sum(axis=1).astype(np.int64)
+            dead = []
+            pol = self.degrade
+            for s, col in slot_cols:
+                hcol = h[:, col]
+                if not hcol.any():
+                    continue
+                hard_counts[s, hcol > 0] += 1
+                if pol is not None and pol.pin_after is not None:
+                    pinned[s] |= hard_counts[s] >= pol.pin_after
+                if pol is not None and pol.fail_after is not None:
+                    fail_steps[s] += 1
+                    if fail_steps[s] >= pol.fail_after:
+                        dead.append(s)
+            return dead
 
         def drain():
             if not pend:
@@ -306,10 +478,18 @@ class Engine:
                 jax.block_until_ready(tok)
                 self.ttft_s[req_index[id(r)]] = time.perf_counter() - t_gen0
 
+        def guard_args(s: int):
+            """(pin, frow) closure extras: batch-1 row ``s`` views."""
+            if not guard_on:
+                return ()
+            return (jnp.asarray(pinned[s:s + 1]),
+                    jnp.asarray(frow_host[s:s + 1]))
+
         def fill_slots():
             for s in range(self.max_slots):
                 while slots[s] is None and queue:
                     r = queue.pop(0)
+                    reset_slot_guard(s)
                     if self.chunk_size > 0:
                         # chunked admit costs nothing here: the prompt
                         # streams through the main loop one chunk per step,
@@ -325,10 +505,29 @@ class Engine:
                               if self._bucketed else true_len)
                     padded = np.zeros((1, bucket), np.int32)
                     padded[0, :true_len] = prompt
-                    self.caches, self.last_tok, tok = self._prefill(
-                        self.params, self.caches, self.last_tok,
-                        jnp.asarray(padded), true_len, s,
-                        float(r.temperature), self._next_key())
+                    # per-slot isolation: a prefill failure (bad request
+                    # reaching the forward, guard plumbing, OOM on an
+                    # oversized bucket) fails *this* request, not the batch;
+                    # the next occupant's zero-reset re-initialises the slot
+                    slots[s] = r
+                    try:
+                        out = self._prefill(
+                            self.params, self.caches, self.last_tok,
+                            jnp.asarray(padded), true_len, s,
+                            float(r.temperature), self._next_key(),
+                            *guard_args(s))
+                    except Exception as e:     # noqa: BLE001
+                        fail_request(s, f"prefill failed: {e!r}")
+                        continue
+                    self.caches, self.last_tok, tok = out[:3]
+                    slots[s] = None
+                    if guard_on:
+                        dead = note_guard(out[3], out[4], [(s, 0)])
+                        if dead:
+                            slots[s] = r
+                            fail_request(
+                                s, "guard hard-fail during prefill")
+                            continue
                     pend.append(("p", tok, req_index[id(r)]))
                     note_first_token(r, tok)
                     if r.max_new_tokens > 1:
@@ -349,11 +548,24 @@ class Engine:
                 chunk = np.zeros((1, self.chunk_size), np.int32)
                 chunk[0, :valid] = prompt[off:off + valid]
                 is_final = off + valid >= prompt.shape[0]
-                self.caches, self.last_tok, tok = self._prefill_chunk(
-                    self.params, self.caches, self.last_tok,
-                    jnp.asarray(chunk), jnp.asarray(off == 0),
-                    jnp.asarray(valid, jnp.int32), jnp.asarray(is_final),
-                    s, float(r.temperature), self._next_key())
+                try:
+                    out = self._prefill_chunk(
+                        self.params, self.caches, self.last_tok,
+                        jnp.asarray(chunk), jnp.asarray(off == 0),
+                        jnp.asarray(valid, jnp.int32), jnp.asarray(is_final),
+                        s, float(r.temperature), self._next_key(),
+                        *guard_args(s))
+                except Exception as e:         # noqa: BLE001
+                    fail_request(s, f"prefill chunk failed: {e!r}")
+                    finished = True            # slot freed -> refill
+                    continue
+                self.caches, self.last_tok, tok = out[:3]
+                if guard_on:
+                    dead = note_guard(out[3], out[4], [(s, 0)])
+                    if dead:
+                        fail_request(s, "guard hard-fail during prefill")
+                        finished = True
+                        continue
                 offsets[s] = off + valid
                 if is_final:
                     pend.append(("p", tok, req_index[id(r)]))
@@ -385,15 +597,32 @@ class Engine:
                 fill_slots()
                 act_host, active, temps = slot_state()
             if act_host.any():
-                self.caches, toks = self._decode(
-                    self.params, self.caches, self.last_tok, active, temps,
-                    self._next_key())
+                # decode is batch-global: an exception here has no per-slot
+                # blame and the donated cache may already be consumed, so it
+                # propagates (per-request isolation covers prefill + guard)
+                if guard_on:
+                    self.caches, toks, trips, hard = self._decode(
+                        self.params, self.caches, self.last_tok, active,
+                        temps, self._next_key(), jnp.asarray(pinned),
+                        jnp.asarray(frow_host))
+                    dead = note_guard(trips, hard,
+                                      [(s, s) for s in range(self.max_slots)
+                                       if act_host[s]])
+                else:
+                    self.caches, toks = self._decode(
+                        self.params, self.caches, self.last_tok, active,
+                        temps, self._next_key())
+                    dead = []
                 self.last_tok = toks
                 pend.append(("d", toks,
                              [req_index[id(r)] if act_host[s] else None
                               for s, r in enumerate(slots)]))
                 for s, r in enumerate(slots):
                     if r is None or not act_host[s]:
+                        continue
+                    if s in dead:
+                        fail_request(s, "guard hard-fail during decode")
+                        turnover = True
                         continue
                     counts[s] += 1
                     if counts[s] >= r.max_new_tokens:
@@ -408,27 +637,12 @@ class Engine:
             if steps > 100_000:
                 raise RuntimeError("serving engine ran away")
         drain()
-        return [r.out_tokens for r in requests]
+        return [None if failed[i] else r.out_tokens
+                for i, r in enumerate(requests)]
 
     # ------------------------------------------------------------- helpers
     def _validate(self, requests: List[Request]) -> None:
-        for i, r in enumerate(requests):
-            prompt = np.asarray(r.prompt)
-            if prompt.ndim != 1 or prompt.shape[0] < 1:
-                raise ValueError(
-                    f"request {i}: prompt must be a non-empty 1-D token "
-                    f"array, got shape {prompt.shape}")
-            if r.max_new_tokens < 1:
-                raise ValueError(
-                    f"request {i}: max_new_tokens must be >= 1, got "
-                    f"{r.max_new_tokens}")
-            total = prompt.shape[0] + r.max_new_tokens
-            if total > self.max_len:
-                raise ValueError(
-                    f"request {i}: prompt length {prompt.shape[0]} + "
-                    f"max_new_tokens {r.max_new_tokens} = {total} overflows "
-                    f"the engine's max_len={self.max_len}; raise max_len or "
-                    f"shorten the request")
+        _validate_requests(requests, self.max_len)
 
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
@@ -481,6 +695,7 @@ class LoopEngine:
     # ------------------------------------------------------------------ API
     def generate(self, requests: List[Request]) -> List[List[int]]:
         """Run all requests to completion; returns generated token lists."""
+        _validate_requests(requests, self.max_len)
         cfg = self.cfg
         queue = list(requests)
         for r in queue:

@@ -154,3 +154,31 @@ def test_dnl_is_static_not_noise():
     c1 = sar_convert(v, jax.random.PRNGKey(0), spec, False)
     c2 = sar_convert(v, jax.random.PRNGKey(42), spec, False)
     np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+# ----------------------------------------------- degenerate-spec contract
+
+
+def test_degenerate_noiseless_glitchy_spec_rejected():
+    """sigma_cmp=0 with p_glitch>0 is not a physical operating point (the
+    glitch mixture models relaxed-*bias* metastability, which a noiseless
+    comparator doesn't have): sar_convert must refuse loudly instead of
+    running a silently half-deterministic conversion."""
+    spec = dataclasses.replace(ideal_spec(), p_glitch=0.05, glitch_mag=20.0)
+    v = jnp.linspace(3.3, 1019.7, 16)
+    with pytest.raises(ValueError, match="degenerate ADCSpec"):
+        sar_convert(v, jax.random.PRNGKey(0), spec, False)
+    # glitch_mag=0 collapses the kick to a point mass: allowed, deterministic
+    ok = dataclasses.replace(ideal_spec(), p_glitch=0.05, glitch_mag=0.0)
+    c1 = sar_convert(v, jax.random.PRNGKey(0), ok, False)
+    c2 = sar_convert(v, jax.random.PRNGKey(1), ok, False)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_negative_noise_params_rejected():
+    for bad in (dict(sigma_cmp=-0.1), dict(p_glitch=-0.01),
+                dict(glitch_mag=-1.0)):
+        spec = dataclasses.replace(ideal_spec(), **bad)
+        with pytest.raises(ValueError, match="negative noise"):
+            sar_convert(jnp.ones((4,)) * 100.0, jax.random.PRNGKey(0), spec,
+                        False)

@@ -1,0 +1,221 @@
+"""Structural fault injection (DESIGN.md §14): determinism, bit-for-bit
+agreement with the ref oracles, no-op neutrality of an empty FaultSpec, and
+composition of the stuck-at plane with the Pallas fused kernel (fault lives
+in the operand -> kernel unchanged, kernel == oracle stays bit-identical)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.adc import sar_convert
+from repro.core.cim import (
+    CIMSpec,
+    adc_stuck_value_int,
+    cim_matmul_behavioral,
+    cim_matmul_bit_exact,
+)
+from repro.core.faults import (
+    FaultSpec,
+    adc_stuck_cols,
+    apply_output_faults,
+    stuck_bit_plane,
+)
+from repro.kernels import ops, ref
+
+
+def _operands(m=4, k=96, n=32, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    spec = CIMSpec(macro_rows=64)
+    qx = quant.qmax(spec.in_bits)
+    qw = quant.qmax(spec.w_bits)
+    xq = jax.random.randint(kx, (m, k), -qx, qx + 1, jnp.int32)
+    wq = jax.random.randint(kw, (k, n), -qw, qw + 1, jnp.int32)
+    return spec, xq, wq
+
+
+# ------------------------------------------------------------ no-op fault
+
+
+def test_empty_faultspec_is_bit_identical_to_none():
+    """FaultSpec() (all rates zero) must not perturb either sim fidelity —
+    no key consumption, no epsilon drift."""
+    spec, xq, wq = _operands()
+    key = jax.random.PRNGKey(3)
+    f0 = dataclasses.replace(spec, fault=FaultSpec())
+    for fn in (cim_matmul_behavioral, cim_matmul_bit_exact):
+        a = np.asarray(fn(xq, wq, key, spec))
+        b = np.asarray(fn(xq, wq, key, f0))
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------- stuck-at bitcells
+
+
+def test_stuck_bit_plane_matches_ref_and_stays_in_storage_range():
+    wq = jax.random.randint(jax.random.PRNGKey(1), (5, 64, 24), -31, 32,
+                            jnp.int32).astype(jnp.int8)
+    key = jax.random.PRNGKey(9)
+    out = stuck_bit_plane(wq, 6, 0.02, key)
+    oracle = ref.stuck_bit_plane_ref(wq, 6, 0.02, key)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+    assert out.dtype == wq.dtype
+    # two's-complement reassembly: stuck MSB may reach -2^(b-1), never below
+    assert int(jnp.min(out)) >= -32 and int(jnp.max(out)) <= 31
+    flipped = int(jnp.sum(out != wq))
+    assert 0 < flipped < wq.size  # some cells stuck, not all
+
+
+def test_stuck_bit_plane_rate_zero_is_identity():
+    wq = jnp.arange(-8, 8, dtype=jnp.int8).reshape(4, 4)
+    out = stuck_bit_plane(wq, 4, 0.0, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(wq))
+
+
+def test_stuck_plane_deterministic_in_seed():
+    wq = jax.random.randint(jax.random.PRNGKey(2), (64, 16), -31, 32,
+                            jnp.int32)
+    a = stuck_bit_plane(wq, 6, 0.05, jax.random.PRNGKey(7))
+    b = stuck_bit_plane(wq, 6, 0.05, jax.random.PRNGKey(7))
+    c = stuck_bit_plane(wq, 6, 0.05, jax.random.PRNGKey(8))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.any(np.asarray(a) != np.asarray(c))
+
+
+# ------------------------------------------------- conversion-level faults
+
+
+def test_sar_convert_fault_matches_oracle_bit_for_bit():
+    spec = CIMSpec().effective_adc()
+    fault = FaultSpec(seed=5, brownout_rate=0.3, brownout_votes=1,
+                      adc_stuck_rate=0.2, adc_stuck_code=1023)
+    v = jax.random.uniform(jax.random.PRNGKey(4), (8, 48), minval=8.0,
+                           maxval=1015.0)
+    key = jax.random.PRNGKey(11)
+    got = sar_convert(v, key, spec, cb=True, fault=fault)
+    want = ref.sar_convert_fault_ref(v, key, spec, cb=True, fault=fault)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_adc_stuck_columns_are_static_per_column():
+    """One ADC serves one column: the same columns are stuck for every key,
+    and a stuck column emits exactly adc_stuck_code."""
+    spec = CIMSpec().effective_adc()
+    fault = FaultSpec(seed=2, adc_stuck_rate=0.25, adc_stuck_code=512)
+    stuck = np.asarray(adc_stuck_cols(fault, 48))
+    assert 0 < stuck.sum() < 48
+    v = jax.random.uniform(jax.random.PRNGKey(0), (8, 48), minval=8.0,
+                           maxval=1015.0)
+    for ks in (0, 1):
+        codes = np.asarray(sar_convert(v, jax.random.PRNGKey(ks), spec,
+                                       cb=True, fault=fault))
+        assert np.all(codes[:, stuck] == 512)
+        assert not np.all(codes[:, ~stuck] == 512)
+
+
+def test_brownout_degrades_only_flagged_conversions():
+    """With brownout_rate=1 every CB conversion collapses to brownout_votes
+    votes — bit-identical to running the ADC at mv_votes=brownout_votes
+    would NOT hold (different key stream), but the healthy rate=0 limit must
+    equal the no-fault path exactly."""
+    spec = CIMSpec().effective_adc()
+    v = jax.random.uniform(jax.random.PRNGKey(6), (4, 32), minval=8.0,
+                           maxval=1015.0)
+    key = jax.random.PRNGKey(13)
+    healthy = sar_convert(v, key, spec, cb=True)
+    no_brown = sar_convert(v, key, spec, cb=True,
+                           fault=FaultSpec(brownout_rate=0.0))
+    np.testing.assert_array_equal(np.asarray(healthy), np.asarray(no_brown))
+    browned = np.asarray(sar_convert(
+        v, key, spec, cb=True,
+        fault=FaultSpec(brownout_rate=1.0, brownout_votes=1)))
+    assert np.any(browned != np.asarray(healthy))
+
+
+# --------------------------------------------------- output-referred faults
+
+
+def test_apply_output_faults_matches_ref():
+    fault = FaultSpec(seed=3, col_gain_std=0.05, col_offset_std=2.0,
+                      adc_stuck_rate=0.1, adc_stuck_code=7,
+                      brownout_rate=0.5, brownout_votes=1)
+    y = jax.random.normal(jax.random.PRNGKey(8), (4, 6, 32)) * 100.0
+    key = jax.random.PRNGKey(21)
+    got = apply_output_faults(y, fault, 3.0, -55.5, 1.25, key=key)
+    want = ref.apply_output_faults_ref(y, fault, 3.0, -55.5, 1.25, key=key)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_behavioral_runtime_faults_change_output_and_are_deterministic():
+    spec, xq, wq = _operands()
+    key = jax.random.PRNGKey(17)
+    fspec = dataclasses.replace(
+        spec, fault=FaultSpec(seed=1, col_gain_std=0.1, col_offset_std=4.0))
+    clean = np.asarray(cim_matmul_behavioral(xq, wq, key, spec))
+    a = np.asarray(cim_matmul_behavioral(xq, wq, key, fspec))
+    b = np.asarray(cim_matmul_behavioral(xq, wq, key, fspec))
+    np.testing.assert_array_equal(a, b)
+    assert np.any(a != clean)
+
+
+# ------------------------------------------- Pallas composition (operand)
+
+
+def test_stuck_plane_composes_with_fused_kernel_bit_identically():
+    """The stuck-at fault lives in the deployed int8 plane, so the Pallas
+    fused kernel consumes it unchanged. Bit-identity holds at the operand
+    level: the jax fault impl and the ref oracle mask the *same* cells, so
+    the kernel output on either plane is bit-for-bit equal; kernel vs
+    analytic oracle carries the usual interpret-mode ulp slack (same
+    tolerance as tests/test_kernels.py)."""
+    spec, _, wq = _operands(k=128, n=32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 128))
+    xs = quant.abs_max_scale(x, spec.in_bits)
+    wq8 = wq.astype(jnp.int8)
+    fkey = jax.random.PRNGKey(3)
+    faulted = stuck_bit_plane(wq8, spec.w_bits, 0.05, fkey)
+    faulted_ref = ref.stuck_bit_plane_ref(wq8, spec.w_bits, 0.05, fkey)
+    sigma = 0.7
+
+    def kern(plane):
+        return ops.cim_matmul_fused_int(
+            x, plane, xs, jnp.int32(42), sigma, spec.in_bits,
+            spec.macro_rows, scale=xs * 1.0, force="pallas_interpret")
+
+    # identical faulted operands -> identical kernel output, bit for bit
+    np.testing.assert_array_equal(np.asarray(kern(faulted)),
+                                  np.asarray(kern(faulted_ref)))
+    # kernel vs analytic oracle on the faulted plane: interpret ulp slack
+    yr = ref.cim_matmul_fused_ref(x, faulted, xs, jnp.int32(42), sigma,
+                                  spec.macro_rows, xs * 1.0, spec.in_bits)
+    np.testing.assert_allclose(np.asarray(kern(faulted)), np.asarray(yr),
+                               rtol=5e-6, atol=2e-5)
+    yc = ref.cim_matmul_fused_ref(x, wq8, xs, jnp.int32(42), sigma,
+                                  spec.macro_rows, xs * 1.0, spec.in_bits)
+    assert np.any(np.asarray(yc) != np.asarray(yr))
+
+
+def test_deployed_epilogue_faults_match_behavioral_realisations():
+    """cim_matmul_deployed applies the runtime faults in dequant units; the
+    per-column realisations must be the exact same draws as the behavioral
+    path (determinism contract: function of (seed, column) only)."""
+    spec, xq, wq = _operands(k=128, n=32)
+    fault = FaultSpec(seed=9, adc_stuck_rate=0.2, adc_stuck_code=100)
+    fspec = dataclasses.replace(spec, fault=fault)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 128))
+    xs = quant.abs_max_scale(x, spec.in_bits)
+    ws = jnp.float32(0.01)
+    y = ops.cim_matmul_deployed(x, wq.astype(jnp.int8), ws, fspec, None,
+                                x_scale=xs)
+    stuck = np.asarray(adc_stuck_cols(fault, 32))
+    unit = float(xs) * float(ws)
+    want = adc_stuck_value_int(fspec, 128) * unit
+    got = np.asarray(y)[:, stuck]
+    np.testing.assert_allclose(got, np.full_like(got, np.float32(want)))
+    # non-stuck columns are the clean (noiseless) kernel output
+    y0 = ops.cim_matmul_deployed(x, wq.astype(jnp.int8), ws, spec, None,
+                                 x_scale=xs)
+    np.testing.assert_array_equal(np.asarray(y)[:, ~stuck],
+                                  np.asarray(y0)[:, ~stuck])

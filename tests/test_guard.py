@@ -1,0 +1,303 @@
+"""ABFT checksum guard + degradation ladder (DESIGN.md §14).
+
+Layer under test: ``core.guard`` (checksum math, ladder), the deploy-time
+checksum column (``core.deploy``), the guarded routing in ``layers.dense``,
+and the serving engine's stateful rungs (pin-to-digital, per-request
+failure) end to end on the fused engine.
+
+The end-to-end isolation contract is stated against the *pinned fault-free
+twin*, not the vanilla fault-free run: ``layers._act_scale`` fits one
+activation scale over the whole batched tensor (shared-Vref semantics), so
+a recovered slot's digital activations legitimately shift every row's
+quantization grid by epsilon. Pre-pinning the victim in the twin
+(``pin_slots``) makes both runs route the victim identically from step 0,
+and then *all* slots must agree bit for bit.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.deploy import deploy
+from repro.core.faults import FaultSpec
+from repro.core.guard import GuardSpec, _retry_spec, checksum_trips
+from repro.core.cim import CIMSpec
+from repro.models.layers import Ctx, dense
+from repro.models.model import build
+from repro.serving.engine import DegradePolicy, Engine, Request
+
+
+def _tiny_dense_cfg(**over):
+    cfg = get_config("qwen2-0.5b").reduced()
+    return dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=256,
+                               vocab_size=128, n_heads=4, n_kv_heads=2,
+                               head_dim=32, **over)
+
+
+@pytest.fixture(scope="module")
+def guard_setup():
+    cfg = _tiny_dense_cfg()
+    params, _ = build(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs():
+    rng = np.random.default_rng(0)
+    return [Request(prompt=rng.integers(1, 127, size=l).astype(np.int32),
+                    max_new_tokens=4) for l in (7, 12, 5)]
+
+
+# -------------------------------------------------------- checksum math
+
+
+def test_checksum_trips_exact_and_localised():
+    """Noise-free consistency: s == chk exactly (integer dots under 2^24 are
+    exact in f32), so nothing trips; a single corrupted element trips only
+    its own row position."""
+    k = jax.random.PRNGKey(2)
+    xq = jax.random.randint(k, (4, 32), -31, 32, jnp.int32)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (32, 16), -31, 32,
+                            jnp.int32)
+    unit = 0.5
+    y = (xq @ wq).astype(jnp.float32) * unit
+    wc = jnp.sum(wq, axis=1, dtype=jnp.int32)
+    gs = GuardSpec()
+    trips = checksum_trips(y, xq, wc, unit, 1.0, gs)
+    assert not bool(jnp.any(trips))
+    y_bad = y.at[1, 3].add(1e4 * unit)
+    trips = np.asarray(checksum_trips(y_bad, xq, wc, unit, 1.0, gs))
+    np.testing.assert_array_equal(trips, [False, True, False, False])
+
+
+def test_checksum_threshold_scales_with_sigma():
+    """The trip threshold is noise-calibrated: an error below
+    threshold_sigmas * sqrt(N) * sigma must NOT trip (it is indistinguishable
+    from the macro's healthy noise floor)."""
+    xq = jnp.zeros((2, 8), jnp.int32)
+    wc = jnp.zeros((8,), jnp.int32)
+    y = jnp.zeros((2, 4), jnp.float32).at[0, 0].set(10.0)
+    gs = GuardSpec(threshold_sigmas=6.0, rel_floor=0.0)
+    # sigma=1: tau = 6*sqrt(4) = 12 > 10 -> quiet; sigma=0.5: tau=6 -> trip
+    assert not bool(jnp.any(checksum_trips(y, xq, wc, 1.0, 1.0, gs)))
+    np.testing.assert_array_equal(
+        np.asarray(checksum_trips(y, xq, wc, 1.0, 0.5, gs)), [True, False])
+
+
+def test_retry_spec_boosts_votes():
+    spec = CIMSpec(cb=False)
+    r = _retry_spec(spec, GuardSpec(retry_votes=12))
+    assert r.cb is True and r.adc.mv_votes == 12
+    assert r.in_bits == spec.in_bits and r.w_bits == spec.w_bits
+
+
+# ---------------------------------------------------- deploy-time checksum
+
+
+def test_deploy_attaches_clean_checksum_column(guard_setup):
+    """wc{bits} == column sum of the *clean* plane — also under a stuck-at
+    fault (software's intent, which is what makes stuck cells detectable)."""
+    cfg, params = guard_setup
+    dep = deploy(cfg, params, guard=True)
+    dep_f = deploy(cfg, params, guard=True,
+                   fault=FaultSpec(seed=7, stuck_rate=0.05))
+
+    def planes(tree, out, path=()):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k.startswith("wq"):
+                    out.append((path, k[2:], tree))
+                elif isinstance(v, dict):
+                    planes(v, out, path + (k,))
+        return out
+
+    clean, faulted = planes(dep, []), planes(dep_f, [])
+    assert clean and len(clean) == len(faulted)
+    any_divergent = False
+    for (path, bits, p), (_, _, pf) in zip(clean, faulted):
+        wc = p[f"wc{bits}"]
+        assert wc.dtype == jnp.int32
+        np.testing.assert_array_equal(
+            np.asarray(wc),
+            np.asarray(jnp.sum(p[f"wq{bits}"].astype(jnp.int32), axis=-1)))
+        # the faulted tree keeps the same clean checksum...
+        np.testing.assert_array_equal(np.asarray(pf[f"wc{bits}"]),
+                                      np.asarray(wc))
+        # ...while its wq plane diverges from its own column sums
+        fsum = jnp.sum(pf[f"wq{bits}"].astype(jnp.int32), axis=-1)
+        any_divergent |= bool(jnp.any(fsum != pf[f"wc{bits}"]))
+    assert any_divergent
+
+
+# ------------------------------------------------- guarded dense routing
+
+
+def _layer0(tree, *names):
+    p = tree["blocks"]
+    for n in names:
+        p = p[n]
+    return jax.tree.map(lambda t: t[0], p)
+
+
+def test_guarded_dense_quiet_run_matches_unguarded_bitwise(guard_setup):
+    """Zero faults -> zero trips, and the guarded output is bit-identical to
+    the plain deployed path (same key stream, first read wins)."""
+    cfg, params = guard_setup
+    dep = deploy(cfg, params, guard=True)
+    p = _layer0(dep, "attn", "q")
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 4, cfg.d_model))
+    key = jax.random.PRNGKey(5)
+    gctx = Ctx.make(cfg, key, mode="sim", deployed=True, guard=GuardSpec())
+    gctx.trip_log, gctx.hard_log = [], []
+    y_g = dense(gctx, p, x, "attn_qkv")
+    y_u = dense(Ctx.make(cfg, key, mode="sim", deployed=True), p, x,
+                "attn_qkv")
+    np.testing.assert_array_equal(np.asarray(y_g), np.asarray(y_u))
+    assert int(sum(jnp.sum(t) for t in gctx.trip_log)) == 0
+    assert int(sum(jnp.sum(t) for t in gctx.hard_log)) == 0
+
+
+def test_guarded_dense_detects_stuck_plane_and_reduces_error(guard_setup):
+    """A dense stuck-at plane trips the checksum on some row positions and
+    the ladder strictly reduces the output error vs the unguarded faulted
+    path. Detection is partial by construction: the checksum sums the error
+    over all N columns, and random-signed bitcell flips partially cancel
+    (grow as sqrt(flips)) while the trip threshold is a fixed 6 sigma of
+    the healthy floor — single-column ABFT catches systematic corruption
+    coherently but dilutes sign-random corruption (the plane-level
+    detection the engine needs survives: any position tripping pins the
+    slot). Run at the 6b operating point where the flip magnitudes are
+    largest relative to the noise floor."""
+    cfg, params = guard_setup
+    cfg6 = dataclasses.replace(
+        cfg, cim=dataclasses.replace(cfg.cim, policy="uniform_6b"))
+    dep = deploy(cfg6, params, guard=True,
+                 fault=FaultSpec(seed=7, stuck_rate=0.5))
+    p = _layer0(dep, "attn", "q")
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
+    ctx = Ctx.make(cfg6, jax.random.PRNGKey(5), mode="sim", deployed=True,
+                   guard=GuardSpec())
+    ctx.trip_log, ctx.hard_log = [], []
+    y = dense(ctx, p, x, "attn_qkv")
+    trips = int(sum(jnp.sum(t) for t in ctx.trip_log))
+    hard = int(sum(jnp.sum(t) for t in ctx.hard_log))
+    assert trips >= 1 and hard >= 1
+    y_u = dense(Ctx.make(cfg6, jax.random.PRNGKey(5), mode="sim",
+                         deployed=True), p, x, "attn_qkv")
+    y_dig = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    err_g = float(jnp.linalg.norm(y - y_dig))
+    err_u = float(jnp.linalg.norm(y_u - y_dig))
+    assert err_g < err_u
+
+
+def test_guarded_dense_full_ladder_on_systematic_fault(guard_setup):
+    """A systematic transient (every element shifted by 4 sigma — the
+    engine's FaultSpec.transient_mag injection) adds coherently over the N
+    columns, so every row position trips, survives the re-read (the
+    disturbance corrupts both analog reads), escalates to hard, and comes
+    back as the exact digital einsum, bit for bit."""
+    cfg, params = guard_setup
+    dep = deploy(cfg, params, guard=True)
+    p = _layer0(dep, "attn", "q")
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 4, cfg.d_model))
+    ctx = Ctx.make(cfg, jax.random.PRNGKey(5), mode="sim", deployed=True,
+                   guard=GuardSpec(), fault=FaultSpec(transient_mag=4.0))
+    ctx.fault_rows = jnp.ones((1,), bool)
+    ctx.trip_log, ctx.hard_log = [], []
+    y = dense(ctx, p, x, "attn_qkv")
+    assert int(sum(jnp.sum(t) for t in ctx.trip_log)) == 4
+    assert int(sum(jnp.sum(t) for t in ctx.hard_log)) == 4
+    y_dig = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_dig))
+
+
+def test_pinned_rows_bypass_macro_and_counters(guard_setup):
+    """Engine-pinned rows take the digital path and are masked out of the
+    trip/hard counters even on a faulted plane."""
+    cfg, params = guard_setup
+    dep = deploy(cfg, params, guard=True,
+                 fault=FaultSpec(seed=7, stuck_rate=0.05))
+    p = _layer0(dep, "attn", "q")
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 4, cfg.d_model))
+    ctx = Ctx.make(cfg, jax.random.PRNGKey(5), mode="sim", deployed=True,
+                   guard=GuardSpec())
+    ctx.trip_log, ctx.hard_log = [], []
+    ctx.pin_rows = jnp.ones((1,), bool)
+    y = dense(ctx, p, x, "attn_qkv")
+    y_dig = jnp.einsum("...k,kn->...n", x, p["w"].astype(x.dtype))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_dig))
+    assert int(sum(jnp.sum(t) for t in ctx.trip_log)) == 0
+    assert int(sum(jnp.sum(t) for t in ctx.hard_log)) == 0
+
+
+# --------------------------------------------------------- engine rungs
+
+
+def test_engine_guard_zero_false_trips_and_token_identity(guard_setup):
+    """Guarded fused serving with no faults: zero trips on every layer and
+    greedy tokens identical to the unguarded engine."""
+    cfg, params = guard_setup
+    g = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0,
+               guard=True)
+    out_g = g.generate(_reqs())
+    u = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0)
+    assert out_g == u.generate(_reqs())
+    assert g.guard_trip_counts.sum() == 0
+    assert g.guard_hard_counts.sum() == 0
+    assert all(e is None for e in g.request_errors)
+
+
+def test_engine_degradation_ladder_end_to_end(guard_setup):
+    """The acceptance scenario: a hard transient on slot 1 completes with
+    that slot pinned to digital — token-for-token equal to the cim='off'
+    reference — and every slot bit-identical to the fault-free twin with
+    the victim pre-pinned (see module docstring for why the twin, not the
+    vanilla run, is the isolation baseline)."""
+    cfg, params = guard_setup
+    fault = FaultSpec(transient_mag=4.0)
+    a = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0,
+               guard=True, fault=fault, fault_slots={1})
+    out_a = a.generate(_reqs())
+    b = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0,
+               guard=True, pin_slots={1})
+    out_b = b.generate(_reqs())
+    out_off = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="off",
+                     seed=0).generate(_reqs())
+    out_c = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim",
+                   seed=0, guard=True).generate(_reqs())
+
+    assert all(o is not None for o in out_a)
+    assert out_a[1] == out_off[1]        # victim recovered onto digital path
+    assert out_a == out_b                # all slots == pre-pinned twin
+    assert out_a[1] != out_c[1]          # the fault did have an effect
+    assert a.guard_hard_counts.sum() > 0
+    assert b.guard_hard_counts.sum() == 0  # pinned rows don't count
+
+
+def test_engine_fail_after_returns_sentinel_not_exception(guard_setup):
+    """DegradePolicy.fail_after: the persistently-faulted request comes back
+    as None with a reason string; the rest of the batch completes."""
+    cfg, params = guard_setup
+    fault = FaultSpec(transient_mag=4.0)
+    d = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0,
+               guard=True, fault=fault, fault_slots={1},
+               degrade=DegradePolicy(pin_after=None, fail_after=2))
+    out = d.generate(_reqs())
+    assert out[1] is None
+    assert out[0] is not None and out[2] is not None
+    assert d.request_errors[1] is not None
+    assert "hard-fail" in d.request_errors[1]
+    assert d.request_errors[0] is None and d.request_errors[2] is None
+
+
+def test_engine_guard_requires_sim_deployed(guard_setup):
+    cfg, params = guard_setup
+    with pytest.raises(ValueError, match="guard requires"):
+        Engine(cfg, params, max_slots=2, max_len=32, cim_mode="off",
+               guard=True)
+    with pytest.raises(ValueError, match="pin_slots requires guard"):
+        Engine(cfg, params, max_slots=2, max_len=32, cim_mode="sim", seed=0,
+               pin_slots={0})

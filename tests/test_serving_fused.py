@@ -341,3 +341,63 @@ def test_kernel_attn_impl_rejected_without_gqa_path():
     with pytest.raises(ValueError, match="attn_impl"):
         Engine(get_config("deepseek-v2-236b").reduced(), params=None,
                max_slots=1, max_len=8, attn_impl="kernel")
+
+
+# ----------------------------------------- per-request failure isolation
+
+
+def test_prefill_exception_fails_one_request_not_batch(dense_setup):
+    """A per-slot prefill exception (whole-prompt path) yields the None
+    sentinel for that request only; the freed slot's next occupant and all
+    other requests match a fresh engine token for token (DESIGN.md §14
+    failure contract)."""
+    cfg, params = dense_setup
+    lens = [6, 9, 5, 7]
+    eng = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=0)
+    real = eng._prefill
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:  # second admit = request 1 into slot 1
+            raise RuntimeError("injected prefill fault")
+        return real(*a, **kw)
+
+    eng._prefill = flaky
+    out = eng.generate(_ragged_requests(cfg, lens, np.random.default_rng(4)))
+    ref = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=0).generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(4)))
+    assert out[1] is None
+    assert "injected prefill fault" in eng.request_errors[1]
+    for i in (0, 2, 3):
+        assert out[i] == ref[i], i
+        assert eng.request_errors[i] is None
+
+
+def test_midprompt_chunk_abort_recycles_slot_cleanly(dense_setup):
+    """Abort a chunked prefill *mid-prompt* (after its first chunk already
+    wrote cache state): the request fails with the sentinel and the next
+    occupant of the recycled slot — whose admit must fully re-initialise the
+    dirty slot — generates token-for-token what a fresh engine produces."""
+    cfg, params = dense_setup
+    lens = [7, 12, 5]
+    eng = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=4)
+    real = eng._prefill_chunk
+    calls = {"n": 0}
+
+    # slot-ordered chunk schedule: call 1 = req0 c0, 2 = req1 c0,
+    # 3 = req0 c1 (final), 4 = req1 c1 <- abort here, mid-prompt
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 4:
+            raise RuntimeError("injected chunk fault")
+        return real(*a, **kw)
+
+    eng._prefill_chunk = flaky
+    out = eng.generate(_ragged_requests(cfg, lens, np.random.default_rng(5)))
+    ref = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=4).generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(5)))
+    assert out[1] is None
+    assert "injected chunk fault" in eng.request_errors[1]
+    assert out[0] == ref[0]
+    assert out[2] == ref[2]  # rode the recycled (dirty) slot 1
