@@ -10,12 +10,16 @@ with the *live* context. This bench quantifies that at the four
 
 On this CPU-only container the Pallas kernel executes in interpret mode
 (a sequential lax-level emulation of the grid), so kernel wall-clock is
-not the TPU number; wall times are recorded for trend-tracking, but the
-acceptance metric is the analytic per-step FLOP/HBM-byte ratio — the
-quantity the TPU kernel actually removes — cross-checked against XLA's
-``cost_analysis`` of the jitted einsum step. The kernel model counts the
-blocks the grid actually computes (verified by the block-count witness in
-tests/test_kernels.py for flash and the parity suite for decode).
+not the TPU number. Every interpret-mode wall-clock column is named
+``*_interpret_us`` and is TREND-ONLY: it tracks emulation-overhead drift
+across PRs and must never be compared against the compiled ``*_einsum_us``
+columns or gated in CI (the JSON carries the same warning in
+``interpret_note``). The acceptance metric is the analytic per-step
+FLOP/HBM-byte ratio — the quantity the TPU kernel actually removes —
+cross-checked against XLA's ``cost_analysis`` of the jitted einsum step.
+The kernel model counts the blocks the grid actually computes (verified by
+the block-count witness in tests/test_kernels.py for flash and the parity
+suite for decode).
 
 Results append to BENCH_attention.json at the repo root (PR-over-PR):
 
@@ -98,7 +102,10 @@ def _model(max_len: int, live: int) -> dict:
 
 
 def run() -> dict:
-    out = {"shape": f"B{B}_H{H}_KV{KV}_D{D}"}
+    out = {"shape": f"B{B}_H{H}_KV{KV}_D{D}",
+           "interpret_note": ("*_interpret_us columns are interpret-mode "
+                              "(CPU-emulated) wall clock: trend-only, not "
+                              "comparable to *_einsum_us, never gated")}
     for max_len, live in CELLS:
         q, k, v, lens = _operands(max_len, live)
         tag = f"L{max_len}_live{live}"

@@ -6,8 +6,9 @@ carries its key and asserts the machine-independent ratio floors — both
 sides of every ratio are measured in the SAME bench run on the same
 machine.
 
-  python -m benchmarks.check_floors deploy    # §12 deployed fast path
-  python -m benchmarks.check_floors prefill   # §13 chunked prefill
+  python -m benchmarks.check_floors deploy      # §12 deployed fast path
+  python -m benchmarks.check_floors prefill     # §13 chunked prefill
+  python -m benchmarks.check_floors megakernel  # §15 fused decode step
 """
 
 from __future__ import annotations
@@ -62,15 +63,19 @@ def check_deploy() -> None:
 
 def check_prefill() -> None:
     """Chunked prefill must beat whole-prompt buckets >= 1.5x on cold TTFT
-    (1 compiled chunk trace vs one per bucket) or warm mixed
-    prefill/decode throughput, compiled einsum path wall-clock — and must
-    compile exactly one prefill trace (-1 = the private jax trace-count
-    API is unavailable; the metric degrades instead of failing CI)."""
+    (mean or worst-request; 1 compiled chunk trace vs one per bucket) or
+    warm mixed prefill/decode throughput, compiled einsum path wall-clock
+    — and must compile exactly one prefill trace (-1 = the private jax
+    trace-count API is unavailable; the metric degrades instead of
+    failing CI)."""
     run = last_with("BENCH_serving.json", "accept_speedup_x")
     x = run["accept_speedup_x"]
     traces = run["chunked_prefill_traces_off"]
-    print(f"chunked cold_ttft_x_off   = {run['cold_ttft_x_off']:.2f}x")
-    print(f"chunked mixed_tok_s_x_off = {run['mixed_tok_s_x_off']:.2f}x")
+    print(f"chunked cold_ttft_x_off     = {run['cold_ttft_x_off']:.2f}x")
+    if "cold_ttft_max_x_off" in run:
+        print(f"chunked cold_ttft_max_x_off = "
+              f"{run['cold_ttft_max_x_off']:.2f}x")
+    print(f"chunked mixed_tok_s_x_off   = {run['mixed_tok_s_x_off']:.2f}x")
     print(f"accept metric: {run['accept_metric']}")
     print(f"prefill traces: chunked={traces} "
           f"whole={run['whole_prefill_traces_off']}")
@@ -108,8 +113,80 @@ def check_faults() -> None:
            float(run["slots_bitexact_vs_pinned_twin"]), ">=", 1.0)
 
 
+def check_megakernel() -> None:
+    """§15 megakernel decode step + single-launch scheduler:
+
+    * ``launch_drop_x`` >= 2 — jitted launches per scheduler iteration
+      must drop at least 2x vs the per-call path (serving_bench witness;
+      the structural number interpret-mode wall-clock can't fake).
+    * ``mixed_device_work_x_{off,sim}`` >= 0.95 — on the warm mixed
+      workload the chunked fused-step engine must spend no more DEVICE
+      seconds than the whole-prompt baseline, within measurement noise
+      (prefill_bench, every launch timed under block_until_ready, paired
+      reps + median). Medians measure ~1.03-1.17 off / ~0.98-1.05 sim
+      with +-7% rep spread; a fused step that lost its decode fusion
+      (masked decode forward every prefill iteration) reads ~0.85, so
+      0.95 separates working from lost without flaking.
+    * ``mixed_tok_s_x_{off,sim}`` >= 0.85 — wall-clock backstop for the
+      regression class this PR fixed (0.81x sim at PR 5/6). Wall-clock
+      PARITY is not gateable on this container: both engines pay ~0.7 ms
+      per scheduler iteration of host dispatch that 2 cores cannot hide,
+      which pins the honest paired-median ratio at parity within noise
+      (0.94-1.04 measured).
+    * MLA + ssm decode kernels vs their pure-jnp oracles, run inline on
+      CPU interpret — the parity the new attn_impl='kernel' routes rest
+      on, re-asserted at gate time rather than trusted from the test run.
+    """
+    serving = last_with("BENCH_serving.json", "launch_drop_x")
+    prefill = last_with("BENCH_serving.json", "mixed_tok_s_x_off")
+    print(f"launches/iter: fused={serving['launches_per_iter_fused']:.2f} "
+          f"percall={serving['launches_per_iter_percall']:.2f}")
+    _floor("launch_drop_x", serving["launch_drop_x"], ">=", 2.0)
+    for mode in ("off", "sim"):
+        print(f"mixed wall samples {mode}: "
+              f"{prefill.get(f'mixed_tok_s_x_samples_{mode}')}")
+        _floor(f"mixed_device_work_x_{mode}",
+               prefill[f"mixed_device_work_x_{mode}"], ">=", 0.95)
+        _floor(f"mixed_tok_s_x_{mode}",
+               prefill[f"mixed_tok_s_x_{mode}"], ">=", 0.85)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as kref
+    from repro.kernels.mla_decode import mla_decode_attention
+    from repro.kernels.ssm_scan import ssm_decode_step
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    b, h, lat, rhd, t = 2, 4, 16, 8, 24
+    args = (jax.random.normal(ks[0], (b, h, lat)),
+            jax.random.normal(ks[1], (b, h, rhd)),
+            jax.random.normal(ks[2], (b, t, lat)),
+            jax.random.normal(ks[3], (b, t, rhd)),
+            jnp.array([24, 7], jnp.int32), 1.0 / (lat + rhd) ** 0.5)
+    mla_err = float(jnp.max(jnp.abs(
+        mla_decode_attention(*args, block_k=8)
+        - kref.mla_decode_attention_ref(*args))))
+    _floor("mla_kernel_parity_err", mla_err, "<=", 1e-4)
+
+    di, ng, ds, nh, win = 64, 1, 16, 2, 3
+    cd = di + 2 * ng * ds
+    sargs = (jax.random.normal(ks[4], (b, win, cd)),
+             jax.random.normal(ks[5], (b, 1, cd)),
+             jax.random.normal(ks[6], (win + 1, cd)),
+             jnp.zeros((cd,)),
+             jax.nn.softplus(jax.random.normal(ks[7], (b, nh))),
+             -jnp.ones((nh,)), jnp.ones((nh,)),
+             jnp.zeros((b, nh, di // nh, ds)), di, ng, ds)
+    got = ssm_decode_step(*sargs)
+    want = kref.ssm_decode_step_ref(*sargs)
+    ssm_err = max(float(jnp.max(jnp.abs(g - w)))
+                  for g, w in zip(got, want))
+    _floor("ssm_kernel_parity_err", ssm_err, "<=", 1e-4)
+
+
 CHECKS = {"deploy": check_deploy, "prefill": check_prefill,
-          "faults": check_faults}
+          "faults": check_faults, "megakernel": check_megakernel}
 
 
 def main(argv) -> None:

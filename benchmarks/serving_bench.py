@@ -23,6 +23,15 @@ container, which is noise, not a 1.8x effect). ``sim_vs_pr3_x`` compares
 against the last PR 3 run recorded on the reference container
 (meaningful there, trend-only in CI).
 
+Since PR 7 the bench also records the *dispatch-count witness* for the
+single-launch scheduler step (DESIGN.md §15): ``launches_per_iter_fused``
+vs ``launches_per_iter_percall`` count jitted program launches per
+scheduler iteration on a mixed chunked-prefill + decode workload, and
+``launch_drop_x`` is their ratio — the CI acceptance gates on the launch
+count, not wall-clock, because on the 2-core interpret-mode container the
+dispatch-tail win is structural (fewer launches) while wall-clock is
+dominated by emulation noise.
+
 Results append to BENCH_serving.json at the repo root (PR-over-PR record):
 
   PYTHONPATH=src python -m benchmarks.serving_bench
@@ -114,12 +123,53 @@ def _deploy_ratio_samples(cfg, params, reps: int = 5):
     return ratios, nod_tok_s
 
 
+def _launch_witness(cfg, params) -> dict:
+    """Jitted launches per scheduler iteration, fused step vs per-call.
+
+    Prefill-heavy ragged prompts (2-5 chunks each at chunk_size=16) with a
+    standing admission queue (2x more requests than slots) and short
+    generations keep several slots mid-prefill for most iterations — the
+    workload where the per-call path pays (#prefilling slots + 1) launches
+    per iteration and the fused ``_step`` pays exactly one. A
+    decode-dominated workload would flatter neither side: per-call already
+    launches ~1 program per pure-decode iteration. Token streams are
+    asserted equal first: the witness must never trade correctness for the
+    launch count.
+    """
+    from repro.serving.engine import Engine, Request
+
+    lens = [64, 48, 80, 32, 56, 40, 72, 24]
+
+    def reqs():
+        rng = np.random.default_rng(1)
+        return [Request(prompt=rng.integers(0, cfg.vocab_size, L,
+                                            dtype=np.int32),
+                        max_new_tokens=4)
+                for L in lens]
+
+    kw = dict(max_slots=SLOTS, max_len=128, chunk_size=16)
+    fused = Engine(cfg, params, **kw)
+    percall = Engine(cfg, params, fused_step=False, **kw)
+    a = fused.generate(reqs())
+    b = percall.generate(reqs())
+    assert a == b, "fused-step scheduler diverged from the per-call path"
+    assert fused._fused_ok, "fused engine silently fell back to per-call"
+    return {
+        "launches_per_iter_fused": fused.launch_count / max(fused.iter_count, 1),
+        "launches_per_iter_percall": (percall.launch_count
+                                      / max(percall.iter_count, 1)),
+        "launch_drop_x": (percall.launch_count / max(percall.iter_count, 1))
+                         / (fused.launch_count / max(fused.iter_count, 1)),
+    }
+
+
 def run() -> dict:
     from repro.serving.engine import Engine, LoopEngine
 
     cfg, params = _setup()
     out: dict = {"slots": SLOTS, "prompt_len": PROMPT_LEN,
                  "decode_tokens": LONG - SHORT}
+    out.update(_launch_witness(cfg, params))
     for mode in ("off", "sim"):
         fused = _decode_tok_s(Engine, cfg, params, mode)
         loop = _decode_tok_s(LoopEngine, cfg, params, mode)

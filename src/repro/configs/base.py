@@ -101,6 +101,13 @@ class ModelConfig:
     kv_cache_int8: bool = False   # quantized GQA cache (per-token/head scale):
                                   # halves serving HBM, the paper's quantized-
                                   # storage spirit applied to the cache
+    fuse_layer: bool = False      # decode-shaped dense blocks run as ONE
+                                  # Pallas program per layer (megakernel:
+                                  # QKV + rope + length-aware attention +
+                                  # O + SwiGLU chained in VMEM,
+                                  # kernels/fused_step.py, DESIGN.md §15);
+                                  # requires mode off, or sim with deployed
+                                  # planes (in-kernel cim_matmul_fused math)
     remat: bool = True
     scan_layers: bool = True
 

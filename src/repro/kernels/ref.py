@@ -460,3 +460,90 @@ def apply_output_faults_ref(y: jnp.ndarray, fault, sigma, stuck_value,
         stuck = uniform_from_bits(bits) < fault.adc_stuck_rate
         out = jnp.where(stuck, jnp.asarray(stuck_value, jnp.float32), out)
     return out
+
+
+# ---------------------------------------------------------------------------
+# decode-step kernel oracles (MLA latent attention, mamba2 selective scan)
+# ---------------------------------------------------------------------------
+
+
+def mla_decode_attention_ref(
+    q_lat: jnp.ndarray,
+    q_rope: jnp.ndarray,
+    ckv: jnp.ndarray,
+    krope: jnp.ndarray,
+    lens: jnp.ndarray,
+    scale: float,
+) -> jnp.ndarray:
+    """Dense oracle for ``kernels.mla_decode.mla_decode_attention``.
+
+    Latent-cache MLA decode attention for one query token per row, with the
+    up-projections already absorbed by the caller (``models/attention.py``
+    folds W_uk into the query and applies W_uv to the returned latent
+    context): logits are the sum of the latent and rope channels, masked to
+    the first ``lens[b]`` cached positions, and the output is the
+    probability-weighted latent cache — shape (B, H, kv_lora).
+
+    ``lens[b] == 0`` rows return exact zeros (mirrors
+    ``decode_attention_ref``).
+    """
+    b, t, _ = ckv.shape
+    logits = (
+        jnp.einsum("bhl,btl->bht", q_lat, ckv)
+        + jnp.einsum("bhd,btd->bht", q_rope, krope)
+    ).astype(jnp.float32) * scale
+    valid = jnp.arange(t)[None, :] < lens[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bht,btl->bhl", probs, ckv.astype(jnp.float32))
+    return jnp.where(lens[:, None, None] > 0, out, 0.0)
+
+
+def ssm_decode_step_ref(
+    conv_cache: jnp.ndarray,
+    xbc: jnp.ndarray,
+    conv_w: jnp.ndarray,
+    conv_b: jnp.ndarray,
+    dt1: jnp.ndarray,
+    a: jnp.ndarray,
+    d: jnp.ndarray,
+    state: jnp.ndarray,
+    d_inner: int,
+    ngroups: int,
+    d_state: int,
+):
+    """Oracle for ``kernels.ssm_scan.ssm_decode_step`` — one fused mamba2
+    decode step (conv update + gateless SSM state recurrence), mirroring the
+    einsum decode branch of ``models/ssm.py`` term for term.
+
+    Args:
+      conv_cache: (B, conv_width-1, conv_dim) rolling conv window (past rows).
+      xbc:        (B, 1, conv_dim) current in-projection slice.
+      conv_w:     (conv_width, conv_dim) depthwise conv weight.
+      conv_b:     (conv_dim,) conv bias.
+      dt1:        (B, nheads) per-head step size, softplus already applied.
+      a:          (nheads,) negative decay rate (-exp(A_log)).
+      d:          (nheads,) skip gain.
+      state:      (B, nheads, headdim, d_state) SSM state, float32.
+
+    Returns:
+      (y, new_conv, new_state): y (B, d_inner) float32 pre-gated-norm
+      output, new_conv (B, conv_width-1, conv_dim) advanced window in
+      xbc.dtype, new_state (B, nheads, headdim, d_state) float32.
+    """
+    nheads = a.shape[0]
+    headdim = d_inner // nheads
+    conv_win = jnp.concatenate([conv_cache.astype(xbc.dtype), xbc], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", conv_win, conv_w) + conv_b
+    xbc_c = jax.nn.silu(conv)
+    xs = xbc_c[:, :d_inner]
+    bv = xbc_c[:, d_inner:d_inner + ngroups * d_state]
+    cv = xbc_c[:, d_inner + ngroups * d_state:]
+    xh = xs.reshape(-1, nheads, headdim).astype(jnp.float32)
+    bm = bv.reshape(-1, ngroups, d_state)[:, 0].astype(jnp.float32)
+    cm = cv.reshape(-1, ngroups, d_state)[:, 0].astype(jnp.float32)
+    da = jnp.exp(dt1.astype(jnp.float32) * a[None, :])
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt1.astype(jnp.float32), xh, bm)
+    new_state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cm) + d[None, :, None] * xh
+    return (y.reshape(-1, d_inner), conv_win[:, 1:], new_state)

@@ -363,14 +363,24 @@ def mla_attention(
         # whole cache per step (which would be ~100x more FLOPs at 32k ctx).
         wuk = p["uk"]["w"].astype(x.dtype).reshape(a.kv_lora, h, a.nope_head_dim)
         q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, wuk)          # (b,1,h,lora)
-        logits = (
-            jnp.einsum("bshl,btl->bhst", q_lat, ckv_all)
-            + jnp.einsum("bshd,btd->bhst", q_rope, krope_all)
-        ).astype(jnp.float32) * scale
-        logits = jnp.where(causal, logits, NEG_INF)
-        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
-        out_lat = jnp.einsum("bhst,btl->bshl", probs, ckv_all)     # (b,1,h,lora)
         wuv = p["uv"]["w"].astype(x.dtype).reshape(a.kv_lora, h, a.v_head_dim)
+        if cfg.attn_impl == "kernel":
+            # length-aware latent-cache decode kernel: O(lens) cache traffic
+            # + online softmax instead of the full-(B, t) masked einsum
+            from repro.kernels.mla_decode import mla_decode_attention
+
+            out_lat = mla_decode_attention(
+                q_lat[:, 0], q_rope[:, 0], ckv_all, krope_all, start + 1,
+                scale=float(1.0 / (a.nope_head_dim + a.rope_head_dim) ** 0.5),
+            )[:, None]                                             # (b,1,h,lora)
+        else:
+            logits = (
+                jnp.einsum("bshl,btl->bhst", q_lat, ckv_all)
+                + jnp.einsum("bshd,btd->bhst", q_rope, krope_all)
+            ).astype(jnp.float32) * scale
+            logits = jnp.where(causal, logits, NEG_INF)
+            probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+            out_lat = jnp.einsum("bhst,btl->bshl", probs, ckv_all)  # (b,1,h,lora)
         out = jnp.einsum("bshl,lhv->bshv", out_lat, wuv)
     else:
         # train/prefill: up-project the compressed kv once

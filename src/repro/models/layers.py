@@ -61,6 +61,10 @@ class Ctx:
     hard_log: Optional[list] = None
     guard_trips: Optional[jnp.ndarray] = None  # (L, B) int32, set by scan
     guard_hard: Optional[jnp.ndarray] = None   # (L, B) int32
+    prefill_valid: Optional[jnp.ndarray] = None  # (B,) int32 valid tokens in
+    # this prefill call (rest of the fixed-shape chunk is pad) — consumed by
+    # state-carrying blocks (ssm conv/SSD) that cannot mask pads via an
+    # attention length the way cached attention does
 
     @classmethod
     def make(cls, cfg: ModelConfig, key: Optional[jax.Array] = None,

@@ -83,8 +83,16 @@ def _dp_degree() -> int:
     return _dp_axes()[2]
 
 
-def moe_block(ctx: Ctx, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+def moe_block(ctx: Ctx, p: Params, x: jnp.ndarray,
+              dropless: bool = False) -> jnp.ndarray:
     """x: (B, S, d) -> (B, S, d).
+
+    ``dropless=True`` sizes the capacity buffer at the worst case
+    (``tl * top_k``) so routing never drops a token: serving paths use it so
+    a token's output cannot depend on how many other tokens share its
+    fixed-shape program (chunked prefill must be token-for-token equal to
+    whole-prompt prefill, DESIGN.md §15); training keeps the classic
+    capacity-factor buffer.
 
     Dispatch is *local per DP shard*: tokens are reshaped to a leading
     (dp_degree,)-group dim that aligns 1:1 with the DP mesh axes, and the
@@ -117,7 +125,11 @@ def moe_block(ctx: Ctx, p: Params, x: jnp.ndarray) -> jnp.ndarray:
     gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)      # (G, tl, k)
     gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
 
-    capacity = max(int(tl * m.top_k / m.n_experts * m.capacity_factor), m.top_k)
+    if dropless:
+        capacity = tl * m.top_k
+    else:
+        capacity = max(int(tl * m.top_k / m.n_experts * m.capacity_factor),
+                       m.top_k)
     flat_e = expert_idx.reshape(groups, tl * m.top_k)
     pos, keep = jax.vmap(
         lambda fe: _dispatch_indices(fe, m.n_experts, capacity))(flat_e)

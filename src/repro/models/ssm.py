@@ -90,10 +90,14 @@ def _segsum(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(mask, out, -jnp.inf)
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int):
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
     """SSD forward (training/prefill).
 
     x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, g, n) with g==1.
+    h0: optional (b, h, p, n) float32 incoming state (chunked prefill
+    resumes mid-prompt from the slot cache; None = zeros). Positions with
+    dt == 0 are exact no-ops on the state (decay exp(0)=1, update 0), which
+    is how callers mask pad tails without breaking the recurrence.
     Returns y: (b, l, h, p), final_state: (b, h, p, n).
     """
     b, l, h, p = x.shape
@@ -127,7 +131,8 @@ def ssd_chunked(x, dt, A, B, C, chunk: int):
         hnew = hprev * dec[..., None, None] + s_new
         return hnew, hprev
 
-    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
     hT, h_before = jax.lax.scan(
         step,
         h0,
@@ -157,9 +162,15 @@ def mamba2_block(
     A = -jnp.exp(p["A_log"])
 
     if cache is None or l > 1:
-        # train / prefill: causal depthwise conv + chunked SSD
+        # train / prefill: causal depthwise conv + chunked SSD. With a cache
+        # the conv context comes from the slot's rolling window (zeros on a
+        # freshly reset slot — identical to the training-time zero pad), so
+        # chunked prefill resumes mid-prompt state-exactly (DESIGN.md §15).
         w = p["conv_w"].astype(xbc.dtype)
-        pad = jnp.zeros((b, s_cfg.conv_width - 1, xbc.shape[-1]), xbc.dtype)
+        if cache is not None:
+            pad = cache["conv"].astype(xbc.dtype)
+        else:
+            pad = jnp.zeros((b, s_cfg.conv_width - 1, xbc.shape[-1]), xbc.dtype)
         xp = jnp.concatenate([pad, xbc], axis=1)
         conv = sum(
             xp[:, i : i + l, :] * w[i][None, None, :]
@@ -171,6 +182,13 @@ def mamba2_block(
         xh = shard(xh, "batch", "seq", "heads", None)
         Bm = B.reshape(b, l, s_cfg.ngroups, s_cfg.d_state)
         Cm = C.reshape(b, l, s_cfg.ngroups, s_cfg.d_state)
+        # chunked prefill: positions past the per-row valid count are pad
+        # tokens (fixed-shape chunk trace) — zeroing their dt makes them
+        # exact state no-ops, same mechanism as the chunk-multiple pad below
+        valid = ctx.prefill_valid if cache is not None else None
+        if valid is not None:
+            keep = jnp.arange(l)[None, :, None] < valid[:, None, None]
+            dt = jnp.where(keep, dt, 0.0)
         # pad seq to chunk multiple
         q = s_cfg.chunk
         lp = -(-l // q) * q
@@ -180,15 +198,36 @@ def mamba2_block(
             dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
             Bm = jnp.pad(Bm, ((0, 0), (0, padlen), (0, 0), (0, 0)))
             Cm = jnp.pad(Cm, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        h0 = cache["state"] if cache is not None else None
         y, hT = ssd_chunked(xh.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
-                            Cm.astype(jnp.float32), q)
+                            Cm.astype(jnp.float32), q, h0=h0)
         y = y[:, :l]
         y = y + p["D"][None, None, :, None] * xh[:, :l].astype(jnp.float32)
         y = y.reshape(b, l, di)
         new_cache = None
         if cache is not None:  # prefill: hand back the decode cache
             win = s_cfg.conv_width - 1
-            new_cache = {"conv": xp[:, -win:, :], "state": hT}
+            if valid is not None:
+                # window of the last `win` *valid* rows: xp row (win + i)
+                # holds new token i, so the window ending at token valid-1
+                # starts at xp row `valid` (always in range; valid >= 1)
+                conv_keep = jax.vmap(
+                    lambda rows, v: jax.lax.dynamic_slice_in_dim(rows, v, win, axis=0)
+                )(xp, valid)
+            else:
+                conv_keep = xp[:, -win:, :]
+            new_cache = {"conv": conv_keep, "state": hT}
+    elif cfg.attn_impl == "kernel":
+        # fused selective-scan decode step: conv advance + state recurrence
+        # + readout in one Pallas program (kernels/ssm_scan.py)
+        from repro.kernels.ssm_scan import ssm_decode_step
+
+        y, new_conv, state = ssm_decode_step(
+            cache["conv"], xbc, p["conv_w"].astype(jnp.float32),
+            p["conv_b"].astype(jnp.float32), dt[:, 0], A, p["D"],
+            cache["state"], di, s_cfg.ngroups, s_cfg.d_state)
+        y = y.reshape(b, 1, di)
+        new_cache = {"conv": new_conv, "state": state}
     else:
         assert l == 1
         conv_win = jnp.concatenate([cache["conv"], xbc], axis=1)  # (b, w, cd)

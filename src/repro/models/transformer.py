@@ -103,7 +103,34 @@ def _init_dense_block(key, cfg: ModelConfig):
             {"attn": aa, "mlp": am, "n1": an1, "n2": an2})
 
 
+def _use_fused_layer(ctx: Ctx, x, cache) -> bool:
+    """Route a decode-shaped dense block through the per-layer megakernel
+    (kernels/fused_step.py, DESIGN.md §15): one Pallas program chains
+    norm + QKV + rope + length-aware attention + O + SwiGLU with the
+    activations VMEM-resident. Only for shapes/modes the kernel replicates
+    bit-for-bit: single-token cached decode, no guard/fault instrumentation,
+    ideal-digital ("off") or deployed sim matmuls (the behavioural
+    ``use_kernel=False`` sim path draws ``jax.random.normal`` noise, which
+    has no in-kernel equivalent — fused sim equality is against the
+    ``use_kernel=True`` Threefry stream)."""
+    cfg = ctx.cfg
+    if not (cfg.fuse_layer and cache is not None and x.shape[1] == 1):
+        return False
+    if ctx.guard is not None or ctx.fault is not None or not cfg.use_rope:
+        return False
+    if x.dtype != jnp.float32:
+        return False
+    if ctx.mode == "off":
+        return True
+    return (ctx.mode == "sim" and ctx.deployed and ctx.key is not None
+            and cfg.cim.act_clip_sigmas > 0)
+
+
 def _dense_block(ctx: Ctx, p: Params, x, positions, cache):
+    if _use_fused_layer(ctx, x, cache):
+        from repro.kernels.fused_step import fused_dense_layer
+
+        return fused_dense_layer(ctx, p, x, cache)
     h, new_cache = attn.gqa_attention(
         ctx, p["attn"], rmsnorm(p["n1"], x, ctx.cfg.norm_eps), positions, cache)
     x = x + h
@@ -132,7 +159,12 @@ def _moe_block(ctx: Ctx, p: Params, x, positions, cache):
     else:
         h, new_cache = attn.gqa_attention(ctx, p["attn"], xn, positions, cache)
     x = x + h
-    x = x + moe_mod.moe_block(ctx, p["moe"], rmsnorm(p["n2"], x, ctx.cfg.norm_eps))
+    # serving (cached) forwards route dropless so a token's experts cannot
+    # depend on how many tokens share the fixed-shape program — chunked
+    # prefill stays token-for-token equal to whole-prompt prefill
+    x = x + moe_mod.moe_block(ctx, p["moe"],
+                              rmsnorm(p["n2"], x, ctx.cfg.norm_eps),
+                              dropless=cache is not None)
     return shard(x, "batch", "seq", "embed"), new_cache
 
 
@@ -301,16 +333,29 @@ def set_cache_lens(caches, value) -> Any:
 
 
 def mask_cache_advance(new_caches, old_caches, active) -> Any:
-    """Freeze the lengths of inactive slots after a fused decode step.
+    """Freeze inactive slots' cache state after a fused decode step.
 
-    active: (B,) bool. Non-len leaves keep the new value — inactive rows'
-    K/V/state writes land in junk space that the per-row masks never expose
-    and that prefill fully rewrites on slot recycle.
+    active: (B,) bool. Attention K/V leaves keep the new value — inactive
+    rows' writes land in junk space (at their frozen ``len``) that the
+    per-row masks never expose and that prefill fully rewrites on slot
+    recycle. SSM ``conv``/``state`` leaves have no such junk space (every
+    decode step rolls the window and decays the state in place), so they
+    are restored alongside ``len`` — otherwise a slot mid-chunked-prefill
+    would have its carried state corrupted by the batch-global decode of
+    the *other* slots.
     """
-    return jax.tree_util.tree_map_with_path(
-        lambda path, new, old: jnp.where(active[None, :], new, old)
-        if _is_len(path) else new,
-        new_caches, old_caches)
+
+    def fix(path, new, old):
+        if _is_len(path):
+            return jnp.where(active[None, :], new, old)
+        if bool(path) and getattr(path[-1], "key", None) in ("conv", "state"):
+            ax = _slot_axis(path)
+            shape = [1] * new.ndim
+            shape[ax] = active.shape[0]
+            return jnp.where(active.reshape(shape), new, old)
+        return new
+
+    return jax.tree_util.tree_map_with_path(fix, new_caches, old_caches)
 
 
 # --------------------------------------------------------------------------

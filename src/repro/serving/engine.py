@@ -122,17 +122,23 @@ def _jit_cache_size(jitted) -> int:
         return -1
 
 
-def _check_attn_impl(cfg: ModelConfig, attn_impl: str) -> None:
-    """Only GQA cached attention consults ``attn_impl``; silently running
-    einsum while the caller benchmarks "the kernel" misattributes every
-    number, so reject families with no GQA decode path outright."""
-    if attn_impl == "kernel" and (cfg.family == "ssm" or cfg.mla is not None):
-        what = "attention-free ssm" if cfg.family == "ssm" else "MLA"
+def _apply_attn_impl(cfg: ModelConfig, attn_impl: Optional[str]) -> ModelConfig:
+    """Validate-and-apply an ``attn_impl`` override; shared by both engines
+    (they used to duplicate the preamble and could drift).
+
+    ``"kernel"`` now covers every decode family: GQA routes through
+    ``kernels/decode_attention.py``, MLA through the latent-cache
+    ``kernels/mla_decode.py``, and ssm/hybrid recurrence through
+    ``kernels/ssm_scan.py`` (DESIGN.md §11/§15) — the old loud rejection of
+    ssm/MLA is gone because there is no longer a silent einsum fallback to
+    mislabel. Unknown strings still fail here, at engine construction,
+    rather than deep inside the first jitted forward."""
+    if attn_impl is None:
+        return cfg
+    if attn_impl not in ("einsum", "kernel"):
         raise ValueError(
-            f"attn_impl='kernel' has no effect on the {what} family "
-            f"'{cfg.name}' (only cached GQA attention routes through the "
-            "Pallas decode kernel, DESIGN.md §11); refusing to run with a "
-            "misleading setting")
+            f"attn_impl must be 'einsum' or 'kernel', got {attn_impl!r}")
+    return dataclasses.replace(cfg, attn_impl=attn_impl)
 
 
 def _resolve_deploy(deploy: Optional[bool], mode: str) -> bool:
@@ -183,6 +189,8 @@ class Engine:
                  deploy: Optional[bool] = None,
                  chunk_size: Optional[int] = None,
                  record_ttft: bool = False,
+                 fused_step: Optional[bool] = None,
+                 fuse_layer: Optional[bool] = None,
                  guard: Any = None,
                  degrade: Optional[DegradePolicy] = None,
                  fault: Any = None,
@@ -192,12 +200,14 @@ class Engine:
             raise ValueError("encdec serving needs per-request encoder "
                              "frames; the token-only engines don't carry them")
         # attn_impl="kernel" flips the fused decode step (and bucketed
-        # prefill) onto the length-aware Pallas attention path — O(len[b])
-        # per slot instead of O(max_len) (DESIGN.md §11). None defers to
+        # prefill) onto the length-aware Pallas paths — O(len[b]) per slot
+        # instead of O(max_len) (DESIGN.md §11/§15). None defers to
         # cfg.attn_impl; "einsum" is the dense reference path.
-        if attn_impl is not None:
-            _check_attn_impl(cfg, attn_impl)
-            cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+        cfg = _apply_attn_impl(cfg, attn_impl)
+        # fuse_layer=True routes decode-shaped dense blocks through the
+        # per-layer megakernel (kernels/fused_step.py, DESIGN.md §15)
+        if fuse_layer is not None and fuse_layer:
+            cfg = dataclasses.replace(cfg, fuse_layer=True)
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
@@ -206,25 +216,20 @@ class Engine:
         self.ttft_s: List[Optional[float]] = []
         self.key = jax.random.PRNGKey(seed)
         self._bucketed = cfg.family in self._BUCKETED_FAMILIES
-        # chunk_size=None -> auto: chunked prefill (DESIGN.md §13) for the
-        # right-pad-safe families, whole-prompt exact-length for the rest.
-        # chunk_size=0 forces the legacy whole-prompt bucketed path (the
-        # prefill_bench baseline); an explicit chunk on an exact-length
-        # family is a loud error, never a silent einsum-style fallback.
+        # chunk_size=None -> auto: chunked prefill (DESIGN.md §13) for EVERY
+        # family. The old exact-length carve-outs are gone: recurrent
+        # ssm/hybrid state now carries across chunks exactly (the SSD scan
+        # is seeded from the cached state and the final chunk's right-pad is
+        # a provable state no-op under dt=0 masking via ``ctx.prefill_valid``
+        # — models/ssm.py), and MoE serving routes dropless (capacity =
+        # every token kept), so routing no longer depends on the per-forward
+        # token count. chunk_size=0 forces the legacy whole-prompt path (the
+        # prefill_bench baseline; still exact-length for non-bucketed
+        # families).
         if chunk_size is not None and chunk_size < 0:
             raise ValueError(f"chunk_size must be >= 0, got {chunk_size}")
         if chunk_size is None:
-            chunk_size = DEFAULT_CHUNK_SIZE if self._bucketed else 0
-        elif chunk_size > 0 and not self._bucketed:
-            raise ValueError(
-                f"chunk_size={chunk_size} is not supported for the "
-                f"'{cfg.family}' family '{cfg.name}': chunked prefill "
-                "right-pads the final chunk, which recurrent ssm/hybrid "
-                "state would absorb, and moe expert-capacity routing "
-                "depends on the per-forward token count — both would "
-                "silently change the generated tokens (DESIGN.md §13). "
-                "These families prefill whole prompts at exact length; "
-                "pass chunk_size=None (auto) or 0.")
+            chunk_size = DEFAULT_CHUNK_SIZE
         self.chunk_size = int(chunk_size)
         # the cache is over-allocated to the next chunk multiple so a final
         # padded chunk's row_update can never clamp back onto live keys
@@ -293,6 +298,7 @@ class Engine:
             """Prefill one request into its slot of the stacked cache."""
             kctx, ksamp = jax.random.split(key)
             ctx = make_ctx(kctx, pin, frow)
+            ctx.prefill_valid = jnp.reshape(true_len, (1,))
             # full zero reset, not just len: a 1-token prompt hits the SSM
             # *decode* branch, which reads conv/state — stale recurrent state
             # from the slot's previous occupant must not leak in
@@ -311,19 +317,25 @@ class Engine:
                 out = out + (ctx.guard_trips, ctx.guard_hard)   # (L, 1) each
             return out
 
-        def prefill_chunk_fn(params, caches, last_tok, tokens, reset, valid,
-                             is_final, slot, temp, key, pin=None, frow=None):
-            """Advance one slot's prefill by one fixed-shape chunk.
+        def chunk_slot_core(params, slot_cache, prev_tok, tokens, reset,
+                            valid, is_final, temp, key, pin=None, frow=None):
+            """Advance ONE slot slice's prefill by one fixed-shape chunk.
 
             ``tokens``: (1, chunk_size), right-padded; ``valid`` of them are
             real. ``reset`` zero-wipes the slot row on the first chunk (the
             recycled-slot hygiene the whole-prompt path does); ``is_final``
-            commits the sampled first token into ``last_tok``. One shape ->
-            exactly one compiled trace for every prompt length.
+            commits the sampled first token as the returned ``keep``. One
+            shape -> exactly one compiled trace for every prompt length.
+
+            Operates on the batch-1 slice so the fused ``_step`` can thread
+            it through ``lax.cond``/``lax.scan`` without copying the whole
+            stacked cache per slot.
             """
             kctx, ksamp = jax.random.split(key)
             ctx = make_ctx(kctx, pin, frow)
-            slot_cache = tf.take_slot(caches, slot)
+            # state-carrying blocks (ssm conv/SSD) must treat the chunk's
+            # right-pad as absent, not as zero tokens (models/ssm.py)
+            ctx.prefill_valid = jnp.reshape(valid, (1,))
             slot_cache = jax.tree.map(
                 lambda t: jnp.where(reset, jnp.zeros_like(t), t), slot_cache)
             start = tf._cache_len(cfg, slot_cache)        # (1,) written keys
@@ -334,19 +346,35 @@ class Engine:
             # the corrected length and the per-row validity mask never
             # exposes them (the next chunk overwrites them in place)
             slot_cache = tf.set_cache_lens(slot_cache, start + valid)
-            caches = tf.put_slot(caches, slot_cache, slot)
             last = jax.lax.dynamic_index_in_dim(logits, valid - 1, axis=1,
                                                 keepdims=False)   # (1, V)
             tok = _sample_tokens(last, jnp.full((1,), temp, jnp.float32),
                                  ksamp)[0]
-            keep = jnp.where(is_final, tok, last_tok[slot])
-            out = (caches, last_tok.at[slot].set(keep), tok)
+            keep = jnp.where(is_final, tok, prev_tok)
+            return slot_cache, keep, tok, ctx
+
+        def chunk_core(params, caches, last_tok, tokens, reset, valid,
+                       is_final, slot, temp, key, pin=None, frow=None):
+            """Whole-cache wrapper over ``chunk_slot_core`` (per-call path)."""
+            slot_cache = tf.take_slot(caches, slot)
+            slot_cache, keep, tok, ctx = chunk_slot_core(
+                params, slot_cache, last_tok[slot], tokens, reset, valid,
+                is_final, temp, key, pin, frow)
+            caches = tf.put_slot(caches, slot_cache, slot)
+            return caches, last_tok.at[slot].set(keep), tok, ctx
+
+        def prefill_chunk_fn(params, caches, last_tok, tokens, reset, valid,
+                             is_final, slot, temp, key, pin=None, frow=None):
+            caches, last_tok, tok, ctx = chunk_core(
+                params, caches, last_tok, tokens, reset, valid, is_final,
+                slot, temp, key, pin, frow)
+            out = (caches, last_tok, tok)
             if guard_on:
                 out = out + (ctx.guard_trips, ctx.guard_hard)
             return out
 
-        def decode_fn(params, caches, last_tok, active, temps, key,
-                      pin=None, frow=None):
+        def decode_core(params, caches, last_tok, active, temps, key,
+                        pin=None, frow=None):
             """One fused step: every active slot emits its next token."""
             kctx, ksamp = jax.random.split(key)
             ctx = make_ctx(kctx, pin, frow)
@@ -355,15 +383,132 @@ class Engine:
             toks = _sample_tokens(logits[:, -1], temps, ksamp)
             toks = jnp.where(active, toks, last_tok)
             new_caches = tf.mask_cache_advance(new_caches, caches, active)
+            return new_caches, toks, ctx
+
+        def decode_fn(params, caches, last_tok, active, temps, key,
+                      pin=None, frow=None):
+            new_caches, toks, ctx = decode_core(
+                params, caches, last_tok, active, temps, key, pin, frow)
             if guard_on:
                 return new_caches, toks, ctx.guard_trips, ctx.guard_hard
             return new_caches, toks
+
+        n_slots = max_slots
+
+        def draw_keys_fn(key, mask):
+            """The per-call PRNG chain — ``key, k = split(key)`` once per
+            True row of ``mask``, zeros elsewhere — as ONE jitted dispatch.
+
+            ``fused_iteration`` used to draw its per-slot + decode keys with
+            up to ``max_slots + 1`` sequential host-side ``split`` calls
+            plus a ``jnp.stack`` (~1.4 ms of dispatch per fused iteration on
+            the 2-core container — more than a whole chunk forward). The
+            scan below is bit-identical to that sequential chain, so the
+            fused and per-call paths still consume the same PRNG stream.
+            """
+            def body(k, m):
+                nk, sub = jax.random.split(k)
+                return (jnp.where(m, nk, k),
+                        jnp.where(m, sub, jnp.zeros_like(sub)))
+
+            return jax.lax.scan(body, key, mask)
+
+        def step_fn(params, caches, last_tok, chunk_toks, flags, temps,
+                    keys):
+            """One whole scheduler iteration as ONE jitted program.
+
+            Collapses the per-iteration dispatch tail — up to ``max_slots``
+            ``_prefill_chunk`` launches plus one ``_decode`` launch — into a
+            single launch (DESIGN.md §15). The per-slot chunk advances run
+            as a ``lax.scan`` over slots in slot order (one traced chunk
+            body, not ``max_slots`` unrolled copies — the unrolled version
+            quadrupled the compile and therefore cold TTFT), with the
+            ``lax.cond`` skip threading only the slot's batch-1 cache slice
+            (a cond over the whole stacked cache tree copied it per slot
+            per iteration; a vmap over slots was tried and rejected — it
+            runs the chunk body for EVERY lane, and the discarded lanes'
+            compute cost more than the dispatch it saved). The batch decode
+            then runs under ONE ``lax.cond(do_decode, ...)`` — skipping the
+            whole decode forward on pure-prefill iterations, which the
+            whole-prompt baseline never pays (one traced cond per
+            iteration is fine; it was the per-SLOT conds over the full tree
+            that copied — and a *static* do_decode would split ``_step``
+            into two compiled variants, breaking the 1-trace witness).
+            Sequencing, math and RNG match the legacy per-call path, so the
+            token streams match bit for bit.
+
+            chunk_toks: (S, 1, chunk); flags: (S, 5) int32 — columns are
+            [reset, valid, final, prefilling, act_after], packed into one
+            host->device transfer (five separate ``jnp.asarray`` calls cost
+            ~60 us of dispatch each); temps: (S,) f32; keys: (S+1, 2) raw
+            PRNG keys — row ``s`` feeds slot ``s``'s chunk, the last row
+            feeds the decode (zeros where unused).
+            """
+            def body(carry, xs):
+                caches, last_tok = carry
+                s, toks_s, f, temp, key = xs
+                reset, valid, final, pre = (f[0] != 0, f[1], f[2] != 0,
+                                            f[3] != 0)
+                sl = tf.take_slot(caches, s)
+
+                def adv(ops):
+                    sl, prev = ops
+                    sl, keep, tok, _ = chunk_slot_core(
+                        params, sl, prev, toks_s, reset, valid, final,
+                        temp, key)
+                    return sl, keep, tok
+
+                def skip(ops):
+                    sl, prev = ops
+                    return sl, prev, jnp.int32(0)
+
+                sl, keep, tok = jax.lax.cond(pre, adv, skip,
+                                             (sl, last_tok[s]))
+                return (tf.put_slot(caches, sl, s),
+                        last_tok.at[s].set(keep)), tok
+
+            (caches, last_tok), ptoks = jax.lax.scan(
+                body, (caches, last_tok),
+                (jnp.arange(n_slots, dtype=jnp.int32), chunk_toks, flags,
+                 temps, keys[:n_slots]))
+
+            active = flags[:, 4] != 0
+
+            def dec(ops):
+                caches, last_tok = ops
+                caches, last_tok, _ = decode_core(
+                    params, caches, last_tok, active, temps, keys[n_slots])
+                return caches, last_tok
+
+            caches, last_tok = jax.lax.cond(
+                jnp.any(active), dec, lambda ops: ops, (caches, last_tok))
+            return caches, last_tok, ptoks
 
         # donate only the cache: last_tok/toks arrays stay referenced by the
         # pending-drain token log until device_get, so they must not alias
         self._prefill = jax.jit(prefill_fn, donate_argnums=(1,))
         self._prefill_chunk = jax.jit(prefill_chunk_fn, donate_argnums=(1,))
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._step = jax.jit(step_fn, donate_argnums=(1,))
+        self._draw_keys = jax.jit(draw_keys_fn)
+        # fused_step=None -> auto: collapse each scheduler iteration into
+        # the single _step launch whenever prefill is chunked and the guard
+        # is off (guard escalation needs per-slot host-side blame, which the
+        # all-or-nothing fused launch cannot assign). An engine that ever
+        # sees _step raise falls back to the per-call path for its lifetime.
+        if fused_step is None:
+            fused_step = self.guard is None and self.chunk_size > 0
+        elif fused_step and (self.guard is not None or self.chunk_size == 0):
+            raise ValueError(
+                "fused_step=True requires chunked prefill (chunk_size > 0) "
+                "and no guard: the single-launch step has no per-slot "
+                "failure isolation and no whole-prompt admission path")
+        self._fused_step = bool(fused_step)
+        self._fused_ok = True
+        # dispatch witness (serving_bench): jitted program launches and
+        # scheduler iterations since the last generate() call
+        self.launch_count = 0
+        self.iter_count = 0
 
     # ------------------------------------------------------------------ API
     @property
@@ -372,7 +517,8 @@ class Engine:
         power-of-two bucket for the whole-prompt path (-1 if the private
         trace-count API is unavailable on this jax)."""
         sizes = (_jit_cache_size(self._prefill),
-                 _jit_cache_size(self._prefill_chunk))
+                 _jit_cache_size(self._prefill_chunk),
+                 _jit_cache_size(self._step))
         if any(s < 0 for s in sizes):
             return -1
         return sum(sizes)
@@ -390,6 +536,8 @@ class Engine:
         """
         self._validate(requests)
         t_gen0 = time.perf_counter()
+        self.launch_count = 0
+        self.iter_count = 0
         self.ttft_s = [None] * len(requests)
         queue = list(requests)
         for r in queue:
@@ -511,6 +659,7 @@ class Engine:
                     # the next occupant's zero-reset re-initialises the slot
                     slots[s] = r
                     try:
+                        self.launch_count += 1
                         out = self._prefill(
                             self.params, self.caches, self.last_tok,
                             jnp.asarray(padded), true_len, s,
@@ -549,6 +698,7 @@ class Engine:
                 chunk[0, :valid] = prompt[off:off + valid]
                 is_final = off + valid >= prompt.shape[0]
                 try:
+                    self.launch_count += 1
                     out = self._prefill_chunk(
                         self.params, self.caches, self.last_tok,
                         jnp.asarray(chunk), jnp.asarray(off == 0),
@@ -585,52 +735,160 @@ class Engine:
                             for r in slots], np.float32)
             return act, jnp.asarray(act), jnp.asarray(tmp)
 
-        fill_slots()
-        act_host, active, temps = slot_state()
-        steps = 0
-        while any(r is not None for r in slots):
-            turnover = False
-            if prefill_chunks():
-                # a slot finished prefilling (or freed at max_new==1):
-                # refresh membership so it joins this iteration's decode
-                # step — or admit the next request into the free slot
-                fill_slots()
-                act_host, active, temps = slot_state()
-            if act_host.any():
-                # decode is batch-global: an exception here has no per-slot
-                # blame and the donated cache may already be consumed, so it
-                # propagates (per-request isolation covers prefill + guard)
-                if guard_on:
-                    self.caches, toks, trips, hard = self._decode(
-                        self.params, self.caches, self.last_tok, active,
-                        temps, self._next_key(), jnp.asarray(pinned),
-                        jnp.asarray(frow_host))
-                    dead = note_guard(trips, hard,
-                                      [(s, s) for s in range(self.max_slots)
-                                       if act_host[s]])
-                else:
-                    self.caches, toks = self._decode(
-                        self.params, self.caches, self.last_tok, active,
-                        temps, self._next_key())
-                    dead = []
-                self.last_tok = toks
-                pend.append(("d", toks,
-                             [req_index[id(r)] if act_host[s] else None
-                              for s, r in enumerate(slots)]))
-                for s, r in enumerate(slots):
-                    if r is None or not act_host[s]:
-                        continue
-                    if s in dead:
-                        fail_request(s, "guard hard-fail during decode")
-                        turnover = True
-                        continue
-                    counts[s] += 1
-                    if counts[s] >= r.max_new_tokens:
+        def fused_iteration() -> bool:
+            """One whole scheduler iteration through the single-launch
+            ``_step`` program (DESIGN.md §15): every still-prefilling slot
+            advances by one chunk AND the batch decode runs, in one jitted
+            dispatch. Token streams (and the PRNG draw order) are identical
+            to the per-call path. Returns False to route the iteration to
+            the per-call body instead: permanently if the step raises (the
+            fallback recovers per-slot failure isolation), or just for this
+            iteration when no slot is prefilling (pure decode is already a
+            single ``_decode`` launch)."""
+            nonlocal turnover
+            n_slots = self.max_slots
+            chunk_toks = np.zeros((n_slots, 1, self.chunk_size), np.int32)
+            resets = np.zeros(n_slots, bool)
+            valids = np.zeros(n_slots, np.int32)
+            finals = np.zeros(n_slots, bool)
+            prefilling = np.zeros(n_slots, bool)
+            act_after = np.zeros(n_slots, bool)
+            for s, r in enumerate(slots):
+                if r is None:
+                    continue
+                if decoding[s]:
+                    act_after[s] = True
+                    continue
+                prompt = np.asarray(r.prompt, np.int32)
+                off = offsets[s]
+                valid = min(self.chunk_size, prompt.shape[0] - off)
+                chunk_toks[s, 0, :valid] = prompt[off:off + valid]
+                resets[s] = off == 0
+                valids[s] = valid
+                # a slot finishing its prompt this iteration joins this
+                # same iteration's decode (matching the per-call scheduler)
+                finals[s] = off + valid >= prompt.shape[0]
+                prefilling[s] = True
+                if finals[s] and r.max_new_tokens > 1:
+                    act_after[s] = True
+            if not prefilling.any():
+                # pure-decode iteration: the per-call path is already a
+                # single ``_decode`` launch, and it skips ``_step``'s
+                # scan-over-slots slice traffic — route it there (this is
+                # NOT the failure fallback; the next mixed iteration fuses)
+                return False
+            do_decode = bool(act_after.any())
+            temps_now = np.array(
+                [float(r.temperature) if r is not None else 0.0
+                 for r in slots], np.float32)
+            # one packed (S, 5) transfer instead of five small ones, and one
+            # jitted key-chain dispatch instead of up to S+1 sequential
+            # splits + a stack — per-iteration host dispatch used to exceed
+            # the cost of a chunk forward (see draw_keys_fn). The key order
+            # (prefilling slots ascending, then the decode) matches the
+            # per-call path, so both consume the same PRNG stream.
+            flags = np.stack(
+                [resets.astype(np.int32), valids,
+                 finals.astype(np.int32), prefilling.astype(np.int32),
+                 act_after.astype(np.int32)], axis=1)
+            key_mask = np.append(prefilling, do_decode)
+            self.key, key_rows = self._draw_keys(self.key,
+                                                 jnp.asarray(key_mask))
+            meta_p = [req_index[id(slots[s])]
+                      if prefilling[s] and finals[s] else None
+                      for s in range(n_slots)]
+            meta_d = [req_index[id(slots[s])] if act_after[s] else None
+                      for s in range(n_slots)]
+            try:
+                self.launch_count += 1
+                caches, toks, ptoks = self._step(
+                    self.params, self.caches, self.last_tok,
+                    jnp.asarray(chunk_toks), jnp.asarray(flags),
+                    jnp.asarray(temps_now), key_rows)
+            except Exception:                  # noqa: BLE001
+                self._fused_ok = False
+                return False
+            self.caches = caches
+            self.last_tok = toks
+            if any(m is not None for m in meta_p):
+                pend.append(("d", ptoks, meta_p))
+            for s in range(n_slots):
+                if not prefilling[s]:
+                    continue
+                offsets[s] += int(valids[s])
+                if finals[s]:
+                    r = slots[s]
+                    note_first_token(r, ptoks)
+                    if r.max_new_tokens > 1:
+                        decoding[s] = True
+                        counts[s] = 1
+                    else:
                         slots[s] = None
                         turnover = True
-            if turnover:
-                fill_slots()
+            if do_decode:
+                pend.append(("d", toks, meta_d))
+                for s in range(n_slots):
+                    if meta_d[s] is None:
+                        continue
+                    counts[s] += 1
+                    if counts[s] >= slots[s].max_new_tokens:
+                        slots[s] = None
+                        turnover = True
+            return True
+
+        fill_slots()
+        steps = 0
+        while any(r is not None for r in slots):
+            self.iter_count += 1
+            turnover = False
+            if self._fused_step and self._fused_ok and fused_iteration():
+                if turnover:
+                    fill_slots()
+            else:
                 act_host, active, temps = slot_state()
+                if prefill_chunks():
+                    # a slot finished prefilling (or freed at max_new==1):
+                    # refresh membership so it joins this iteration's decode
+                    # step — or admit the next request into the free slot
+                    fill_slots()
+                    act_host, active, temps = slot_state()
+                if act_host.any():
+                    # decode is batch-global: an exception here has no
+                    # per-slot blame and the donated cache may already be
+                    # consumed, so it propagates (per-request isolation
+                    # covers prefill + guard)
+                    self.launch_count += 1
+                    if guard_on:
+                        self.caches, toks, trips, hard = self._decode(
+                            self.params, self.caches, self.last_tok, active,
+                            temps, self._next_key(), jnp.asarray(pinned),
+                            jnp.asarray(frow_host))
+                        dead = note_guard(
+                            trips, hard,
+                            [(s, s) for s in range(self.max_slots)
+                             if act_host[s]])
+                    else:
+                        self.caches, toks = self._decode(
+                            self.params, self.caches, self.last_tok, active,
+                            temps, self._next_key())
+                        dead = []
+                    self.last_tok = toks
+                    pend.append(("d", toks,
+                                 [req_index[id(r)] if act_host[s] else None
+                                  for s, r in enumerate(slots)]))
+                    for s, r in enumerate(slots):
+                        if r is None or not act_host[s]:
+                            continue
+                        if s in dead:
+                            fail_request(s, "guard hard-fail during decode")
+                            turnover = True
+                            continue
+                        counts[s] += 1
+                        if counts[s] >= r.max_new_tokens:
+                            slots[s] = None
+                            turnover = True
+                if turnover:
+                    fill_slots()
             if len(pend) >= self.drain_every:
                 drain()
             steps += 1
@@ -663,9 +921,7 @@ class LoopEngine:
                  max_len: int = 512, cim_mode: Optional[str] = None,
                  seed: int = 0, attn_impl: Optional[str] = None,
                  deploy: Optional[bool] = None):
-        if attn_impl is not None:
-            _check_attn_impl(cfg, attn_impl)
-            cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+        cfg = _apply_attn_impl(cfg, attn_impl)
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len

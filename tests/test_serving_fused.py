@@ -151,9 +151,10 @@ def test_chunked_prefill_single_trace(dense_setup):
 
 
 def test_chunked_default_and_fallbacks(dense_setup):
-    """chunk_size=None auto-chunks the right-pad-safe families and falls
-    back to whole-prompt for exact-length families; an explicit chunk on
-    those is a loud error, not a silent fallback."""
+    """chunk_size=None now auto-chunks EVERY family (DESIGN.md §15): the
+    old exact-length carve-outs (ssm/hybrid state, moe capacity routing)
+    are covered by state-carrying chunk continuation and dropless serving
+    routing. Negative sizes stay a loud error."""
     from repro.serving.engine import DEFAULT_CHUNK_SIZE
 
     cfg, params = dense_setup
@@ -162,10 +163,9 @@ def test_chunked_default_and_fallbacks(dense_setup):
     for arch in ("mamba2-130m", "zamba2-7b", "olmoe-1b-7b"):
         fam_cfg = get_config(arch).reduced()
         eng = Engine(fam_cfg, params=None, max_slots=1, max_len=16)
-        assert eng.chunk_size == 0, arch       # documented fallback
-        with pytest.raises(ValueError, match="chunk"):
-            Engine(fam_cfg, params=None, max_slots=1, max_len=16,
-                   chunk_size=8)
+        assert eng.chunk_size == DEFAULT_CHUNK_SIZE, arch
+        assert Engine(fam_cfg, params=None, max_slots=1, max_len=16,
+                      chunk_size=8).chunk_size == 8, arch
     with pytest.raises(ValueError, match="chunk_size"):
         Engine(cfg, params, max_slots=1, max_len=32, chunk_size=-2)
 
@@ -332,15 +332,24 @@ def test_encdec_rejected():
         Engine(cfg, params=None, max_slots=1, max_len=8)
 
 
-def test_kernel_attn_impl_rejected_without_gqa_path():
-    """attn_impl='kernel' on families whose cached attention never consults
-    it (ssm, MLA) must error, not silently benchmark the einsum path."""
+def test_kernel_attn_impl_accepted_everywhere_bogus_rejected():
+    """attn_impl='kernel' is now a real path for every decode family —
+    ssm routes through kernels/ssm_scan.py and MLA through
+    kernels/mla_decode.py (DESIGN.md §15) — so engine construction accepts
+    it (the old loud rejection guarded a silent einsum fallback that no
+    longer exists). Unknown strings still fail at construction."""
+    ssm_eng = Engine(get_config("mamba2-130m").reduced(), params=None,
+                     max_slots=1, max_len=8, attn_impl="kernel")
+    assert ssm_eng.cfg.attn_impl == "kernel"
+    mla_eng = Engine(get_config("deepseek-v2-236b").reduced(), params=None,
+                     max_slots=1, max_len=8, attn_impl="kernel")
+    assert mla_eng.cfg.attn_impl == "kernel"
     with pytest.raises(ValueError, match="attn_impl"):
-        Engine(get_config("mamba2-130m").reduced(), params=None,
-               max_slots=1, max_len=8, attn_impl="kernel")
+        Engine(get_config("qwen2-0.5b").reduced(), params=None,
+               max_slots=1, max_len=8, attn_impl="flash")
     with pytest.raises(ValueError, match="attn_impl"):
-        Engine(get_config("deepseek-v2-236b").reduced(), params=None,
-               max_slots=1, max_len=8, attn_impl="kernel")
+        LoopEngine(get_config("qwen2-0.5b").reduced(), params=None,
+                   max_slots=1, max_len=8, attn_impl="flash")
 
 
 # ----------------------------------------- per-request failure isolation
@@ -381,7 +390,10 @@ def test_midprompt_chunk_abort_recycles_slot_cleanly(dense_setup):
     dirty slot — generates token-for-token what a fresh engine produces."""
     cfg, params = dense_setup
     lens = [7, 12, 5]
-    eng = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=4)
+    # fused_step=False: the single-launch step has no per-slot failure
+    # isolation (it falls back to this per-call path when it raises)
+    eng = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=4,
+                 fused_step=False)
     real = eng._prefill_chunk
     calls = {"n": 0}
 
@@ -395,7 +407,8 @@ def test_midprompt_chunk_abort_recycles_slot_cleanly(dense_setup):
 
     eng._prefill_chunk = flaky
     out = eng.generate(_ragged_requests(cfg, lens, np.random.default_rng(5)))
-    ref = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=4).generate(
+    ref = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=4,
+                 fused_step=False).generate(
         _ragged_requests(cfg, lens, np.random.default_rng(5)))
     assert out[1] is None
     assert "injected chunk fault" in eng.request_errors[1]
