@@ -9,6 +9,7 @@ machine.
   python -m benchmarks.check_floors deploy      # §12 deployed fast path
   python -m benchmarks.check_floors prefill     # §13 chunked prefill
   python -m benchmarks.check_floors megakernel  # §15 fused decode step
+  python -m benchmarks.check_floors overload    # §16 front-end soak
 """
 
 from __future__ import annotations
@@ -185,8 +186,36 @@ def check_megakernel() -> None:
     _floor("ssm_kernel_parity_err", ssm_err, "<=", 1e-4)
 
 
+def check_overload() -> None:
+    """§16 overload soak: the front-end must never lose or wedge a request
+    (every submission ends in exactly one terminal outcome), bound the p99
+    queue wait by the watermark policy (<= queue_limit services ahead of
+    any admitted request, both sides measured in the same run), replay a
+    retried request bit-for-bit under its stable rid, and restore full CB
+    votes once the backlog drains below the low watermark."""
+    run = last_with("BENCH_overload.json", "lost_requests")
+    print(f"overload soak: {run['n_requests']} requests, "
+          f"outcomes {run['outcomes']}")
+    print(f"queue_wait p50/p99 = {run['queue_wait_p50_s']:.3f}s / "
+          f"{run['queue_wait_p99_s']:.3f}s "
+          f"(service_p99 {run['service_p99_s']:.3f}s)")
+    print(f"ladder: {run['degraded_admissions']} degraded admissions, "
+          f"{run['ladder_transitions']} transitions, recovery votes "
+          f"{run['recovery_votes']}/{run['full_votes']}")
+    _floor("lost_requests", run["lost_requests"], "<=", 0)
+    _floor("wedged_requests", run["wedged_requests"], "<=", 0)
+    # the soak sheds by design (waves of 10 into a 6-deep queue); a soak
+    # that shed nothing never reached overload and proves nothing
+    _floor("shed_fraction", run["shed_fraction"], ">=", 0.01)
+    _floor("queue_wait_p99_x", run["queue_wait_p99_x"], "<=", 1.0)
+    _floor("retry_bit_identical", run["retry_bit_identical"], ">=", 1.0)
+    _floor("vote_recovery", run["vote_recovery"], ">=", 1.0)
+    _floor("degraded_admissions", run["degraded_admissions"], ">=", 1)
+
+
 CHECKS = {"deploy": check_deploy, "prefill": check_prefill,
-          "faults": check_faults, "megakernel": check_megakernel}
+          "faults": check_faults, "megakernel": check_megakernel,
+          "overload": check_overload}
 
 
 def main(argv) -> None:

@@ -32,6 +32,12 @@ count, not wall-clock, because on the 2-core interpret-mode container the
 dispatch-tail win is structural (fewer launches) while wall-clock is
 dominated by emulation noise.
 
+Since PR 8 the run also records the async front-end's scheduling tails
+(DESIGN.md §16): ``frontend_queue_wait_p50/p99_s`` and
+``frontend_ttft_p50/p99_s`` over a 12-request burst into the bounded
+admission queue, from the structured per-request MetricsLog records
+(compile excluded via a warm-up request).
+
 Results append to BENCH_serving.json at the repo root (PR-over-PR record):
 
   PYTHONPATH=src python -m benchmarks.serving_bench
@@ -163,6 +169,47 @@ def _launch_witness(cfg, params) -> dict:
     }
 
 
+def _frontend_latency(cfg, params) -> dict:
+    """Queue-wait and TTFT tails through the async front-end (§16).
+
+    12 requests burst into a 4-slot engine behind the bounded-admission
+    front-end; per-request queue wait and TTFT come from the structured
+    MetricsLog records. Percentiles are computed over the measured burst
+    only — a separate warm-up request eats the prefill/decode compile so
+    the tails reflect scheduling, not XLA."""
+    from repro.serving.engine import Engine
+    from repro.serving.frontend import Frontend
+    from repro.serving.metrics import percentile
+
+    eng = Engine(cfg, params, max_slots=SLOTS,
+                 max_len=PROMPT_LEN + SHORT + 8, cim_mode="off")
+    fe = Frontend(eng, queue_limit=12, high_watermark=8, low_watermark=4,
+                  clock=time.perf_counter)
+    rng = np.random.default_rng(2)
+
+    def _one(rid):
+        return fe.submit(list(rng.integers(0, cfg.vocab_size, PROMPT_LEN)),
+                         SHORT, rid=rid)
+
+    warm = _one("warm")
+    while fe.pending():
+        fe.tick()
+    assert warm.outcome == "completed", warm.outcome
+    burst = [_one(f"lat-{i}") for i in range(12)]
+    while fe.pending():
+        fe.tick()
+    assert all(t.outcome == "completed" for t in burst), \
+        [t.outcome for t in burst]
+    waits = [t.record.queue_wait_s for t in burst]
+    ttfts = [t.record.ttft_s for t in burst]
+    return {
+        "frontend_queue_wait_p50_s": percentile(waits, 50),
+        "frontend_queue_wait_p99_s": percentile(waits, 99),
+        "frontend_ttft_p50_s": percentile(ttfts, 50),
+        "frontend_ttft_p99_s": percentile(ttfts, 99),
+    }
+
+
 def run() -> dict:
     from repro.serving.engine import Engine, LoopEngine
 
@@ -170,6 +217,7 @@ def run() -> dict:
     out: dict = {"slots": SLOTS, "prompt_len": PROMPT_LEN,
                  "decode_tokens": LONG - SHORT}
     out.update(_launch_witness(cfg, params))
+    out.update(_frontend_latency(cfg, params))
     for mode in ("off", "sim"):
         fused = _decode_tok_s(Engine, cfg, params, mode)
         loop = _decode_tok_s(LoopEngine, cfg, params, mode)

@@ -296,6 +296,41 @@ def brownout_extra_std_int(spec: CIMSpec, k: int) -> float:
             * math.sqrt(f.brownout_rate * tiles * s_bw * dvar) * qx / gain)
 
 
+def vote_drop_extra_std_int(spec: CIMSpec, k: int,
+                            votes: Optional[int]) -> float:
+    """Extra output noise std when CB majority votes run at ``votes``.
+
+    The load-adaptive degradation ladder (DESIGN.md §16) admits requests at
+    reduced majority-vote counts under overload — the paper's accuracy/energy
+    knob turned into an overload-shedding dial. A conversion voted ``votes``
+    times instead of ``spec.adc.mv_votes`` carries the comparator-noise
+    variance of the smaller vote count; the *extra* variance per conversion is
+    ``var(votes) - var(mv_votes)`` (quant/INL/DNL cancel in the difference),
+    propagated through the same gain/shift-add chain as
+    ``output_noise_std_int``. This is ``brownout_extra_std_int`` at rate 1
+    with an explicit vote count: a *policy* brownout instead of a fault.
+
+    ``votes=None`` (full fidelity) or ``votes >= mv_votes`` or a non-CB spec
+    return exactly 0.0 — a ladder-level-0 row adds literal +0.0 noise and
+    stays bit-identical to a ladder-free engine.
+    """
+    if votes is None or not spec.cb or votes >= spec.adc.mv_votes:
+        return 0.0
+    if votes < 1:
+        raise ValueError(f"degraded vote count must be >= 1, got {votes}")
+    adc = spec.effective_adc()
+    dvar = max(
+        adc_total_error_var_lsb2(
+            dataclasses.replace(adc, mv_votes=votes), spec.cb)
+        - adc_total_error_var_lsb2(adc, spec.cb), 0.0)
+    gain = spec.analog_gain(rows=k) * spec.attenuation
+    s_bw = quant.sum_sq_plane_weights(spec.w_bits)
+    qx = quant.qmax(spec.in_bits)
+    tiles = _num_k_tiles(k, spec.macro_rows)
+    return (spec.noise_scale
+            * math.sqrt(tiles * s_bw * dvar) * qx / gain)
+
+
 @partial(jax.jit, static_argnames=("spec",))
 def cim_matmul_behavioral(
     xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec: CIMSpec

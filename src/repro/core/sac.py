@@ -89,6 +89,62 @@ def uniform(in_bits: int = 6, w_bits: int = 6, cb: bool = True) -> Policy:
     return Policy(name=f"uniform_{in_bits}b{'_cb' if cb else ''}", attn=spec, mlp=spec)
 
 
+@dataclasses.dataclass(frozen=True)
+class DegradeLadder:
+    """Load-adaptive accuracy/energy ladder (DESIGN.md §16).
+
+    The paper's majority-voting ADC makes accuracy/energy a *runtime* knob;
+    under overload the serving front-end climbs this ladder instead of
+    shedding: level 0 admits at full fidelity, higher levels admit new
+    requests at reduced CB majority-vote counts (cheaper, noisier — the
+    behavioural model adds the analytically-equivalent extra output noise,
+    ``core.cim.vote_drop_extra_std_int``). The level is chosen with
+    hysteresis against the admission-queue depth: climb one rung when depth
+    reaches the high watermark, descend one rung when it falls below the low
+    watermark, hold in between (so the ladder doesn't flap across a single
+    boundary).
+
+    ``votes``: vote-count override per level; index 0 MUST be ``None``
+    (full fidelity — a level-0 row is bit-identical to a ladder-free
+    engine). Entries must be strictly decreasing.
+    """
+
+    votes: tuple = (None, 3, 1)
+
+    def __post_init__(self):
+        if not self.votes or self.votes[0] is not None:
+            raise ValueError(
+                f"ladder level 0 must be None (full votes), got {self.votes}")
+        prev = None
+        for v in self.votes[1:]:
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(
+                    f"ladder vote counts must be ints >= 1, got {self.votes}")
+            if prev is not None and v >= prev:
+                raise ValueError(
+                    f"ladder vote counts must strictly decrease, "
+                    f"got {self.votes}")
+            prev = v
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.votes)
+
+    def votes_at(self, level: int, full_votes: int = 6) -> int:
+        """Effective vote count at ``level`` (for records/energy accounting)."""
+        v = self.votes[min(max(level, 0), len(self.votes) - 1)]
+        return full_votes if v is None else min(v, full_votes)
+
+    def next_level(self, current: int, depth: int,
+                   high: int, low: int) -> int:
+        """One hysteresis step of the ladder controller."""
+        if depth >= high:
+            return min(current + 1, len(self.votes) - 1)
+        if depth < low:
+            return max(current - 1, 0)
+        return current
+
+
 POLICIES = {
     "paper_sac": paper_sac,
     "cb_only": cb_only,

@@ -30,12 +30,28 @@ checksum guard with the degradation ladder (DESIGN.md §14) and prints the
 per-layer trip/hard counters after the run. ``--fault-stuck`` /
 ``--fault-transient`` / ``--fault-slot`` inject a deterministic fault
 scenario to watch the ladder work; ``--fail-after`` arms the request-fail
-rung (failed requests print as FAILED, the batch keeps going).
+rung (failed requests print as FAILED with their structured RequestError,
+the batch keeps going).
+
+``--frontend`` serves through the resilient asyncio front-end
+(DESIGN.md §16) instead of one batch ``generate()`` call: bounded
+admission (``--queue-limit``, overflow shed with reason), per-request
+deadlines (``--deadline-s``) and TTFT budgets (``--ttft-budget-s``),
+retry-with-backoff on retryable failures (``--retries``), and graceful
+drain on SIGINT/SIGTERM bounded by ``--drain-deadline-s``. ``--stagger-s``
+spaces out arrivals to exercise admission under load. With ``--ladder``
+the backlog watermarks (``--high-watermark`` / ``--low-watermark``) drive
+load-adaptive CB vote degradation (``--ladder-votes``, sim mode's noise
+model; mutually exclusive with --guard). The run ends with the structured
+per-request records (queue wait, TTFT, tok/s, votes, retries, outcome)
+and the MetricsLog summary.
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
+import signal
 import time
 
 import jax
@@ -43,11 +59,13 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models.model import build
-from repro.serving.engine import Engine, LoopEngine, Request
+from repro.serving.engine import Engine, LoopEngine, Request, RequestError
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def _build_argparser():
+    ap = argparse.ArgumentParser(
+        description="CR-CIM serving demo: fused slot-batched engine, "
+                    "optionally behind the resilient async front-end")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
@@ -103,13 +121,64 @@ def main():
         "--fail-after", type=int, default=0,
         help="fail a request after this many hard-tripping steps "
              "(0 = never fail; keep serving on the digital recompute)")
-    args = ap.parse_args()
+    # ------------------------------------------- async front-end (§16)
+    ap.add_argument(
+        "--frontend", action="store_true",
+        help="serve through the resilient asyncio front-end: bounded "
+             "admission, deadlines/TTFT budgets, deterministic retries, "
+             "streaming delivery, SIGINT/SIGTERM graceful drain "
+             "(DESIGN.md §16; fused engine only)")
+    ap.add_argument(
+        "--queue-limit", type=int, default=16,
+        help="front-end admission backlog bound; overflow requests are "
+             "shed synchronously with a structured reason")
+    ap.add_argument(
+        "--high-watermark", type=int, default=None,
+        help="backlog depth at/above which the vote-degradation ladder "
+             "climbs one rung per tick (default queue-limit // 2)")
+    ap.add_argument(
+        "--low-watermark", type=int, default=None,
+        help="backlog depth below which the ladder descends back toward "
+             "full votes (default high-watermark // 2)")
+    ap.add_argument(
+        "--ladder", action="store_true",
+        help="load-adaptive CB vote degradation: admissions above the high "
+             "watermark run reduced majority votes (extra output-referred "
+             "comparator noise in sim mode); mutually exclusive with "
+             "--guard")
+    ap.add_argument(
+        "--ladder-votes", default="3,1",
+        help="comma-separated vote counts for ladder rungs 1.. (rung 0 is "
+             "always full fidelity), strictly decreasing, e.g. '3,1'")
+    ap.add_argument(
+        "--deadline-s", type=float, default=None,
+        help="per-request wall-clock deadline (seconds from submit); "
+             "expired requests are cancelled queued, mid-prefill or "
+             "mid-decode, slot recycled token-clean")
+    ap.add_argument(
+        "--ttft-budget-s", type=float, default=None,
+        help="per-request time-to-first-token budget; requests with no "
+             "token by then end deadline_expired")
+    ap.add_argument(
+        "--retries", type=int, default=1,
+        help="max retry attempts for retryable failures; retries replay "
+             "the identical token stream (rid-keyed sampling) absent "
+             "faults")
+    ap.add_argument(
+        "--drain-deadline-s", type=float, default=10.0,
+        help="graceful-drain bound after stop/SIGINT: accepted work gets "
+             "this long to finish before being cancelled")
+    ap.add_argument(
+        "--stagger-s", type=float, default=0.0,
+        help="spacing between request arrivals in --frontend mode "
+             "(0 = all at once, the overload case)")
+    ap.add_argument(
+        "--temperature", type=float, default=0.0,
+        help="sampling temperature (0 = greedy)")
+    return ap
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    api = build(cfg)
-    params, _ = api.init(jax.random.PRNGKey(0))
+
+def _build_engine(args, cfg, params):
     engine_cls = Engine if args.engine == "fused" else LoopEngine
     engine_kw = dict(cim_mode=args.cim,
                      attn_impl=(None if args.attn_impl == "config"
@@ -128,37 +197,39 @@ def main():
             if args.fail_after > 0:
                 engine_kw["degrade"] = DegradePolicy(
                     pin_after=1, fail_after=args.fail_after)
+        if args.ladder:
+            from repro.core.sac import DegradeLadder
+            votes = tuple(int(v) for v in args.ladder_votes.split(",") if v)
+            engine_kw["ladder"] = DegradeLadder(votes=(None,) + votes)
         if args.fault_stuck > 0.0 or args.fault_transient > 0.0:
             from repro.core.faults import FaultSpec
             engine_kw["fault"] = FaultSpec(
                 seed=args.fault_seed, stuck_rate=args.fault_stuck,
                 transient_mag=args.fault_transient)
             engine_kw["fault_slots"] = args.fault_slot or ()
-    elif args.guard or args.fault_stuck or args.fault_transient:
-        raise SystemExit("--guard/--fault-* need the fused engine "
+    elif args.guard or args.ladder or args.fault_stuck or args.fault_transient:
+        raise SystemExit("--guard/--ladder/--fault-* need the fused engine "
                          "(--engine fused): the loop reference engine has "
-                         "no guard path")
-    engine = engine_cls(cfg, params, max_slots=args.slots,
-                        max_len=args.prompt_len + args.new_tokens + 8,
-                        **engine_kw)
-    if engine.deployed:
-        from repro.core.deploy import plane_summary
-        ps = plane_summary(engine.params)
-        print(f"deployed {ps['planes']} pre-quantized weight planes "
-              f"({ps['int8_bytes'] / 2**20:.1f} MiB int8 vs "
-              f"{ps['f32_bytes'] / 2**20:.1f} MiB f32 streamed per call)")
+                         "no guard or ladder path")
+    return engine_cls(cfg, params, max_slots=args.slots,
+                      max_len=args.prompt_len + args.new_tokens + 8,
+                      **engine_kw)
+
+
+def _run_batch(args, engine, cfg):
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, args.prompt_len,
                                         dtype=np.int32),
-                    max_new_tokens=args.new_tokens)
+                    max_new_tokens=args.new_tokens,
+                    temperature=args.temperature)
             for _ in range(args.requests)]
     t0 = time.time()
     outs = engine.generate(reqs)
     dt = time.time() - t0
-    total_tokens = sum(len(o) for o in outs if o is not None)
-    n_failed = sum(o is None for o in outs)
+    failed = [isinstance(o, RequestError) for o in outs]
+    total_tokens = sum(len(o) for o, f in zip(outs, failed) if not f)
     print(f"[{args.engine}] served {len(reqs)} requests "
-          f"({n_failed} failed), {total_tokens} tokens in {dt:.1f}s "
+          f"({sum(failed)} failed), {total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens / dt:.1f} tok/s)")
     if getattr(engine, "guard", None) is not None:
         trips = engine.guard_trip_counts
@@ -166,9 +237,9 @@ def main():
         print(f"  guard: per-layer trips {trips.tolist()} / "
               f"hard {hard.tolist()} "
               f"(total {int(trips.sum())}/{int(hard.sum())})")
-        for i, err in enumerate(engine.request_errors):
-            if err is not None:
-                print(f"  req{i}: FAILED — {err}")
+    for i, err in enumerate(getattr(engine, "request_errors", [])):
+        if err is not None:
+            print(f"  req{i}: FAILED — {err}")
     ttfts = [t for t in getattr(engine, "ttft_s", []) if t is not None]
     if ttfts:
         print(f"  TTFT mean {np.mean(ttfts) * 1e3:.0f} ms / "
@@ -176,7 +247,79 @@ def main():
               f"({engine.prefill_traces} prefill traces, "
               f"chunk={engine.chunk_size})")
     for i, o in enumerate(outs[:4]):
-        print(f"  req{i}: " + ("FAILED" if o is None else f"{o[:10]}..."))
+        print(f"  req{i}: " + (f"FAILED ({o})" if isinstance(o, RequestError)
+                               else f"{o[:10]}..."))
+
+
+async def _run_frontend(args, engine, cfg):
+    from repro.serving.frontend import Frontend
+    fe = Frontend(engine, queue_limit=args.queue_limit,
+                  high_watermark=args.high_watermark,
+                  low_watermark=args.low_watermark,
+                  default_ttft_budget_s=args.ttft_budget_s,
+                  max_retries=args.retries,
+                  drain_deadline_s=args.drain_deadline_s)
+    loop = asyncio.get_running_loop()
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        try:
+            loop.add_signal_handler(sig, fe.stop)
+        except (NotImplementedError, RuntimeError):
+            pass  # non-unix event loop: ctrl-C falls back to KeyboardInterrupt
+    runner = asyncio.create_task(fe.run())
+    rng = np.random.default_rng(0)
+    tickets = []
+    t0 = time.time()
+    for i in range(args.requests):
+        t = fe.submit(list(rng.integers(0, cfg.vocab_size, args.prompt_len)),
+                      args.new_tokens, temperature=args.temperature,
+                      rid=f"req-{i}", timeout_s=args.deadline_s)
+        tickets.append(t)
+        if args.stagger_s > 0:
+            await asyncio.sleep(args.stagger_s)
+    await asyncio.gather(*(t.wait() for t in tickets))
+    fe.stop()
+    await runner
+    dt = time.time() - t0
+    total = sum(len(t.tokens) for t in tickets)
+    print(f"[frontend] {len(tickets)} requests, {total} tokens in {dt:.1f}s "
+          f"({total / dt:.1f} tok/s)")
+    for t in tickets:
+        r = t.record
+        print(f"  {t.rid}: {r.outcome:<16} wait={r.queue_wait_s or 0:.3f}s "
+              f"ttft={'-' if r.ttft_s is None else f'{r.ttft_s:.3f}s'} "
+              f"toks={r.tokens_out} votes={r.votes_used} "
+              f"retries={r.retries}"
+              + (f"  [{r.reason}]" if r.reason else ""))
+    s = fe.metrics.summary()
+    print(f"  summary: outcomes={s['outcomes']} "
+          f"queue_wait_p99={s['queue_wait_p99_s']} "
+          f"ttft_p99={s['ttft_p99_s']} "
+          f"degraded={s['degraded_admissions']} "
+          f"transitions={s['ladder_transitions']}")
+
+
+def main():
+    args = _build_argparser().parse_args()
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    if args.frontend and args.engine != "fused":
+        raise SystemExit("--frontend needs the fused engine "
+                         "(--engine fused): the front-end drives the "
+                         "incremental session API")
+    engine = _build_engine(args, cfg, params)
+    if engine.deployed:
+        from repro.core.deploy import plane_summary
+        ps = plane_summary(engine.params)
+        print(f"deployed {ps['planes']} pre-quantized weight planes "
+              f"({ps['int8_bytes'] / 2**20:.1f} MiB int8 vs "
+              f"{ps['f32_bytes'] / 2**20:.1f} MiB f32 streamed per call)")
+    if args.frontend:
+        asyncio.run(_run_frontend(args, engine, cfg))
+    else:
+        _run_batch(args, engine, cfg)
 
 
 if __name__ == "__main__":

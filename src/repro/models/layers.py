@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import quant
-from repro.core.cim import CIMSpec, cim_dense
+from repro.core.cim import CIMSpec, cim_dense, vote_drop_extra_std_int
 from repro.core.sac import Policy, get_policy
 from repro.distributed.sharding import shard
 
@@ -65,6 +65,11 @@ class Ctx:
     # this prefill call (rest of the fixed-shape chunk is pad) — consumed by
     # state-carrying blocks (ssm conv/SSD) that cannot mask pads via an
     # attention length the way cached attention does
+    degrade_levels: tuple = ()            # static ladder: vote count per level
+    # (index 0 is None = full votes); mirrors sac.DegradeLadder.votes. Sim
+    # mode adds the per-row analytically-equivalent extra output noise of the
+    # reduced vote count (core.cim.vote_drop_extra_std_int, DESIGN.md §16)
+    degrade_rows: Optional[jnp.ndarray] = None  # (B,) int32 ladder level/row
 
     @classmethod
     def make(cls, cfg: ModelConfig, key: Optional[jax.Array] = None,
@@ -147,9 +152,51 @@ def dense(ctx: Ctx, p: Params, x: jnp.ndarray, role: str) -> jnp.ndarray:
         else:
             y = cim_dense(x, p["w"].astype(x.dtype), spec, k, mode=ctx.mode,
                           x_scale=xs)
+        y = _degrade_noise(ctx, p, x, y, spec, k, xs)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y
+
+
+def _degrade_noise(ctx: Ctx, p: Params, x: jnp.ndarray, y: jnp.ndarray,
+                   spec: CIMSpec, k: Optional[jax.Array], xs):
+    """Per-row degraded-vote noise for the overload ladder (DESIGN.md §16).
+
+    Rows admitted above ladder level 0 run their CB majority votes at the
+    level's reduced count; behaviourally that is extra output-referred
+    Gaussian noise with the analytically-derived sigma
+    (``core.cim.vote_drop_extra_std_int``), scaled from integer product
+    units to output units by the dequant scales exactly like the QAT noise
+    path. The noise key is folded off the layer key (``0xD364``) so the
+    main readout-noise stream is bit-identical with and without a ladder,
+    and level-0 rows are selected via ``where`` (not ``+0.0``) so they stay
+    bit-for-bit identical to a ladder-free engine.
+
+    Sim mode only: in off mode the ladder is pure admission bookkeeping
+    (there is no analog noise to degrade), which is also what makes off-mode
+    retry streams reproducible across ladder levels.
+    """
+    if (ctx.degrade_rows is None or not ctx.degrade_levels
+            or ctx.mode != "sim" or k is None):
+        return y
+    kdim = x.shape[-1]
+    table = [vote_drop_extra_std_int(spec, kdim, v)
+             for v in ctx.degrade_levels]
+    if not any(s > 0.0 for s in table):
+        return y
+    ws = p.get(f"ws{spec.w_bits}")
+    if ws is None:
+        ws = quant.abs_max_scale(p["w"].astype(jnp.float32), spec.w_bits)
+    if xs is None:
+        xs = quant.abs_max_scale(x.astype(jnp.float32), spec.in_bits)
+    sig = jnp.take(jnp.asarray(table, jnp.float32), ctx.degrade_rows)
+    sig = sig.reshape(sig.shape + (1,) * (y.ndim - 1))
+    noise = jax.random.normal(jax.random.fold_in(k, 0xD364), y.shape,
+                              jnp.float32)
+    return jnp.where(sig > 0.0,
+                     (y.astype(jnp.float32) + sig * xs * ws * noise)
+                     .astype(y.dtype),
+                     y)
 
 
 def _act_scale(ctx: Ctx, x: jnp.ndarray, spec: CIMSpec):

@@ -21,25 +21,43 @@ Two engines share the ``Request`` API:
 * ``LoopEngine`` — the frozen seed reference ("vLLM-lite"): one batch-1
   cache per slot and one jitted decode dispatch per slot per token, with a
   host sync in ``_sample``. Kept verbatim for the fused-vs-loop equality
-  test and as the baseline of ``benchmarks/serving_bench.py``.
+  test and as the baseline of ``benchmarks/serving_bench.py`` (per-request
+  failure isolation was retrofitted — the RequestError contract below is
+  shared by both engines — but the token math is untouched).
 
-Robustness (DESIGN.md §14): the fused ``Engine`` optionally runs every
+The scheduler is an *incremental session* (DESIGN.md §16): ``begin()`` /
+``submit()`` / ``cancel()`` / ``step()`` / ``has_work()`` expose one
+scheduler iteration at a time so the asyncio front-end
+(``serving/frontend.py``) can admit, stream, expire and cancel requests
+between steps; ``generate()`` is exactly ``begin`` + submit-all + step-loop
+and therefore bit-identical to the pre-session batch API. Per-request
+sampling keys derive from a stable request id (``Request.rid``) and the
+token index — never from the engine's per-step key chain — so a re-submitted
+request replays its sampled token stream bit-for-bit in off mode (per-row
+decode logits are batch-invariant there; sim-mode readout noise is
+batch-global by design and is reproduced only under the same batch
+schedule). The per-step chain still feeds the CIM noise context, unchanged.
+
+Robustness (DESIGN.md §14/§16): the fused ``Engine`` optionally runs every
 CIM-routed matmul under the ABFT checksum guard (``guard=``, requires
 sim-mode deployed planes) and escalates per (slot, layer) on guard trips
-via ``DegradePolicy`` — the in-graph ladder (vote-boosted retry -> digital
-recompute) lives in ``core.guard``; the engine adds the *stateful* rungs:
-pinning a tripping layer of a slot to the digital path for the rest of the
-request, and failing a persistently-tripping request. Failed requests —
-whether by guard hard-fail or by a per-slot exception during prefill —
-return the ``None`` sentinel in the results list (never an exception), the
-slot is recycled, and the rest of the batch is unaffected.
+via ``DegradePolicy``; independently, a ``sac.DegradeLadder`` lets the
+front-end admit requests at reduced majority-vote counts under load
+(``Request.degrade_level`` → per-row extra readout noise in sim mode,
+``models.layers._degrade_noise``). Failed requests — per-slot exception
+during prefill, per-slot exception during *decode* (isolated by re-probing
+each active slot solo against the same compiled program), or guard
+hard-fail — yield a structured ``RequestError`` (reason, phase, slot,
+retryable) at their position in the results list (never an exception), the
+slot is recycled token-clean, and the rest of the batch is unaffected.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, List, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +79,42 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     out_tokens: Optional[List[int]] = None
+    # stable request id: the per-request sampling key is derived from it, so
+    # a retry submitted under the same rid reproduces its token stream
+    # bit-for-bit in off mode (None -> submission index; reproducible only
+    # within one session's submission order)
+    rid: Optional[str] = None
+    # ladder level assigned at admission (sac.DegradeLadder index; 0 = full
+    # fidelity). Ignored unless the engine was built with ``ladder=``.
+    degrade_level: int = 0
+    # absolute deadline on the scheduler's clock (time.perf_counter unless
+    # the front-end injects its own); ``step(now=...)`` expires the request
+    # wherever it is — queued, mid-prefill or mid-decode
+    deadline: Optional[float] = None
+
+
+@dataclasses.dataclass
+class RequestError:
+    """Structured per-request failure record (DESIGN.md §16).
+
+    Replaces the PR 6 bare ``None`` sentinel: a failed request's slot in the
+    results list (and ``engine.request_errors``) carries the reason, the
+    phase it died in (``admit | prefill | decode``), the slot it occupied,
+    the tripping layer when the guard assigned one, and whether a retry is
+    worth attempting (transient exception: yes; guard hard-fail on a
+    persistent analog fault: no).
+    """
+
+    reason: str
+    phase: str = "decode"
+    slot: Optional[int] = None
+    layer: Optional[int] = None
+    retryable: bool = True
+
+    def __str__(self) -> str:
+        where = f"slot={self.slot}" if self.slot is not None else "queued"
+        lay = f", layer={self.layer}" if self.layer is not None else ""
+        return f"[{self.phase}/{where}{lay}] {self.reason}"
 
 
 @dataclasses.dataclass
@@ -71,7 +125,7 @@ class DegradePolicy:
     of a layer for a slot, pin that (slot, layer) to the digital path for
     the rest of the request (None disables pinning). ``fail_after``: after
     this many *steps* with any hard trip for a slot, declare the request
-    failed — its result becomes the ``None`` sentinel and the slot recycles
+    failed — its result becomes a ``RequestError`` and the slot recycles
     (None: never fail; keep serving on the digital recompute)."""
 
     pin_after: Optional[int] = 1
@@ -99,6 +153,13 @@ def _validate_requests(requests: List[Request], max_len: int) -> None:
                 f"max_new_tokens {r.max_new_tokens} = {total} overflows "
                 f"the engine's max_len={max_len}; raise max_len or "
                 f"shorten the request")
+
+
+def _request_uid(r: Request, fallback: int) -> int:
+    """Stable 31-bit uid behind the per-request sampling key."""
+    if r.rid:
+        return zlib.crc32(str(r.rid).encode()) & 0x7FFFFFFF
+    return fallback & 0x7FFFFFFF
 
 
 def _pow2_bucket(n: int, lo: int = 8) -> int:
@@ -162,13 +223,30 @@ def _maybe_deploy(cfg: ModelConfig, params: Any, deployed: bool,
 
 
 def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
-                   key: jax.Array) -> jnp.ndarray:
-    """(B, V) logits + (B,) temps -> (B,) int32; argmax rows where temp<=0."""
+                   keys: jnp.ndarray) -> jnp.ndarray:
+    """(B, V) logits + (B,) temps + (B, 2) per-request keys -> (B,) int32.
+
+    Each row samples under its own key (``fold_in(request key, token
+    index)``, derived by the caller) so sampled streams depend only on the
+    request identity and position — never on batch composition or on the
+    engine's per-step key chain. Argmax rows (temp<=0) ignore the keys
+    entirely: greedy streams are independent of the key plumbing.
+    """
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     safe = jnp.where(temps > 0, temps, 1.0)
-    sampled = jax.random.categorical(
-        key, logits.astype(jnp.float32) / safe[:, None], axis=-1)
+    scaled = logits.astype(jnp.float32) / safe[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
     return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+
+
+def _row_sample_keys(rkeys: jnp.ndarray, tok_idx: jnp.ndarray) -> jnp.ndarray:
+    """(B, 2) request keys + (B,) token indices -> (B, 2) sampling keys."""
+    return jax.vmap(jax.random.fold_in)(rkeys, tok_idx)
+
+
+# terminal request outcomes (acceptance vocabulary of the overload soak);
+# "shed" is assigned by the front-end, which never submits a shed request
+OUTCOMES = ("completed", "failed", "cancelled", "deadline_expired", "shed")
 
 
 class Engine:
@@ -195,7 +273,8 @@ class Engine:
                  degrade: Optional[DegradePolicy] = None,
                  fault: Any = None,
                  fault_slots: Any = None,
-                 pin_slots: Any = None):
+                 pin_slots: Any = None,
+                 ladder: Any = None):
         if cfg.family == "encdec":
             raise ValueError("encdec serving needs per-request encoder "
                              "frames; the token-only engines don't carry them")
@@ -215,6 +294,11 @@ class Engine:
         self.record_ttft = record_ttft
         self.ttft_s: List[Optional[float]] = []
         self.key = jax.random.PRNGKey(seed)
+        # per-request sampling keys fold off a base derived only from the
+        # seed — never from the consumed per-step chain — so they are stable
+        # across generate() calls and engine restarts with the same seed
+        self._sample_base = jax.random.fold_in(jax.random.PRNGKey(seed),
+                                               0x5A17)
         self._bucketed = cfg.family in self._BUCKETED_FAMILIES
         # chunk_size=None -> auto: chunked prefill (DESIGN.md §13) for EVERY
         # family. The old exact-length carve-outs are gone: recurrent
@@ -261,6 +345,24 @@ class Engine:
                 raise ValueError(
                     f"guard trip export rides the stacked layer scan; "
                     f"family '{cfg.family}' is not wired for it")
+        # load-adaptive vote-degradation ladder (DESIGN.md §16): per-row
+        # reduced-vote admission, modelled as extra output-referred readout
+        # noise in layers.dense. Mutually exclusive with the guard (guard
+        # escalation needs per-call blame and its dense path bypasses the
+        # ladder noise) and with the dense megakernel (fuse_layer decode
+        # bypasses layers.dense entirely, so a ladder level would silently
+        # become bookkeeping-only).
+        self.ladder = ladder
+        if self.ladder is not None:
+            if self.guard is not None:
+                raise ValueError(
+                    "ladder and guard are mutually exclusive: guarded dense "
+                    "bypasses the per-row degraded-vote noise path")
+            if cfg.fuse_layer:
+                raise ValueError(
+                    "ladder requires fuse_layer=False: the per-layer "
+                    "megakernel bypasses layers.dense, where the per-row "
+                    "degraded-vote noise is applied")
         self.fault = fault
         self.fault_slots = frozenset(int(s) for s in (fault_slots or ()))
         # pin_slots: operator knob — serve these slots on the digital path
@@ -275,7 +377,7 @@ class Engine:
             DegradePolicy() if self.guard is not None else None)
         self.guard_trip_counts = np.zeros(cfg.n_layers, np.int64)
         self.guard_hard_counts = np.zeros(cfg.n_layers, np.int64)
-        self.request_errors: List[Optional[str]] = []
+        self.request_errors: List[Optional[RequestError]] = []
         self.params = _maybe_deploy(cfg, params, self.deployed, fault=fault,
                                     guard=self.guard is not None)
 
@@ -285,19 +387,27 @@ class Engine:
         deployed = self.deployed
         guard_on = self.guard is not None
         gspec, fspec = self.guard, self.fault
+        ladder_votes = (tuple(self.ladder.votes)
+                        if self.ladder is not None else ())
 
-        def make_ctx(kctx, pin, frow):
+        def make_ctx(kctx, pin, frow, lvl=None):
             ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed,
                            guard=gspec, fault=fspec)
             ctx.pin_layers = pin
             ctx.fault_rows = frow
+            if ladder_votes and lvl is not None:
+                ctx.degrade_levels = ladder_votes
+                ctx.degrade_rows = lvl
             return ctx
 
         def prefill_fn(params, caches, last_tok, tokens, true_len, slot,
-                       temp, key, pin=None, frow=None):
+                       temp, key, rkey, lvl, pin=None, frow=None):
             """Prefill one request into its slot of the stacked cache."""
-            kctx, ksamp = jax.random.split(key)
-            ctx = make_ctx(kctx, pin, frow)
+            # the split mirrors the legacy (kctx, ksamp) draw so the CIM
+            # noise context consumes the per-step chain unchanged; sampling
+            # now keys off the request identity instead of ksamp
+            kctx, _ = jax.random.split(key)
+            ctx = make_ctx(kctx, pin, frow, lvl=jnp.reshape(lvl, (1,)))
             ctx.prefill_valid = jnp.reshape(true_len, (1,))
             # full zero reset, not just len: a 1-token prompt hits the SSM
             # *decode* branch, which reads conv/state — stale recurrent state
@@ -311,14 +421,15 @@ class Engine:
             slot_cache = tf.set_cache_lens(slot_cache, true_len)
             caches = tf.put_slot(caches, slot_cache, slot)
             tok = _sample_tokens(last, jnp.full((1,), temp, jnp.float32),
-                                 ksamp)[0]
+                                 jax.random.fold_in(rkey, 0)[None])[0]
             out = (caches, last_tok.at[slot].set(tok), tok)
             if guard_on:
                 out = out + (ctx.guard_trips, ctx.guard_hard)   # (L, 1) each
             return out
 
         def chunk_slot_core(params, slot_cache, prev_tok, tokens, reset,
-                            valid, is_final, temp, key, pin=None, frow=None):
+                            valid, is_final, temp, key, rkey, lvl,
+                            pin=None, frow=None):
             """Advance ONE slot slice's prefill by one fixed-shape chunk.
 
             ``tokens``: (1, chunk_size), right-padded; ``valid`` of them are
@@ -331,8 +442,8 @@ class Engine:
             it through ``lax.cond``/``lax.scan`` without copying the whole
             stacked cache per slot.
             """
-            kctx, ksamp = jax.random.split(key)
-            ctx = make_ctx(kctx, pin, frow)
+            kctx, _ = jax.random.split(key)
+            ctx = make_ctx(kctx, pin, frow, lvl=jnp.reshape(lvl, (1,)))
             # state-carrying blocks (ssm conv/SSD) must treat the chunk's
             # right-pad as absent, not as zero tokens (models/ssm.py)
             ctx.prefill_valid = jnp.reshape(valid, (1,))
@@ -349,46 +460,50 @@ class Engine:
             last = jax.lax.dynamic_index_in_dim(logits, valid - 1, axis=1,
                                                 keepdims=False)   # (1, V)
             tok = _sample_tokens(last, jnp.full((1,), temp, jnp.float32),
-                                 ksamp)[0]
+                                 jax.random.fold_in(rkey, 0)[None])[0]
             keep = jnp.where(is_final, tok, prev_tok)
             return slot_cache, keep, tok, ctx
 
         def chunk_core(params, caches, last_tok, tokens, reset, valid,
-                       is_final, slot, temp, key, pin=None, frow=None):
+                       is_final, slot, temp, key, rkey, lvl,
+                       pin=None, frow=None):
             """Whole-cache wrapper over ``chunk_slot_core`` (per-call path)."""
             slot_cache = tf.take_slot(caches, slot)
             slot_cache, keep, tok, ctx = chunk_slot_core(
                 params, slot_cache, last_tok[slot], tokens, reset, valid,
-                is_final, temp, key, pin, frow)
+                is_final, temp, key, rkey, lvl, pin, frow)
             caches = tf.put_slot(caches, slot_cache, slot)
             return caches, last_tok.at[slot].set(keep), tok, ctx
 
         def prefill_chunk_fn(params, caches, last_tok, tokens, reset, valid,
-                             is_final, slot, temp, key, pin=None, frow=None):
+                             is_final, slot, temp, key, rkey, lvl,
+                             pin=None, frow=None):
             caches, last_tok, tok, ctx = chunk_core(
                 params, caches, last_tok, tokens, reset, valid, is_final,
-                slot, temp, key, pin, frow)
+                slot, temp, key, rkey, lvl, pin, frow)
             out = (caches, last_tok, tok)
             if guard_on:
                 out = out + (ctx.guard_trips, ctx.guard_hard)
             return out
 
         def decode_core(params, caches, last_tok, active, temps, key,
-                        pin=None, frow=None):
+                        rkeys, tok_idx, lvls, pin=None, frow=None):
             """One fused step: every active slot emits its next token."""
-            kctx, ksamp = jax.random.split(key)
-            ctx = make_ctx(kctx, pin, frow)
+            kctx, _ = jax.random.split(key)
+            ctx = make_ctx(kctx, pin, frow, lvl=lvls)
             logits, new_caches = tf.forward(
                 params, {"tokens": last_tok[:, None]}, cfg, ctx, caches)
-            toks = _sample_tokens(logits[:, -1], temps, ksamp)
+            toks = _sample_tokens(logits[:, -1], temps,
+                                  _row_sample_keys(rkeys, tok_idx))
             toks = jnp.where(active, toks, last_tok)
             new_caches = tf.mask_cache_advance(new_caches, caches, active)
             return new_caches, toks, ctx
 
         def decode_fn(params, caches, last_tok, active, temps, key,
-                      pin=None, frow=None):
+                      rkeys, tok_idx, lvls, pin=None, frow=None):
             new_caches, toks, ctx = decode_core(
-                params, caches, last_tok, active, temps, key, pin, frow)
+                params, caches, last_tok, active, temps, key, rkeys,
+                tok_idx, lvls, pin, frow)
             if guard_on:
                 return new_caches, toks, ctx.guard_trips, ctx.guard_hard
             return new_caches, toks
@@ -414,7 +529,7 @@ class Engine:
             return jax.lax.scan(body, key, mask)
 
         def step_fn(params, caches, last_tok, chunk_toks, flags, temps,
-                    keys):
+                    keys, rkeys):
             """One whole scheduler iteration as ONE jitted program.
 
             Collapses the per-iteration dispatch tail — up to ``max_slots``
@@ -437,16 +552,17 @@ class Engine:
             Sequencing, math and RNG match the legacy per-call path, so the
             token streams match bit for bit.
 
-            chunk_toks: (S, 1, chunk); flags: (S, 5) int32 — columns are
-            [reset, valid, final, prefilling, act_after], packed into one
-            host->device transfer (five separate ``jnp.asarray`` calls cost
-            ~60 us of dispatch each); temps: (S,) f32; keys: (S+1, 2) raw
-            PRNG keys — row ``s`` feeds slot ``s``'s chunk, the last row
-            feeds the decode (zeros where unused).
+            chunk_toks: (S, 1, chunk); flags: (S, 7) int32 — columns are
+            [reset, valid, final, prefilling, act_after, tok_idx, level],
+            packed into one host->device transfer (separate ``jnp.asarray``
+            calls cost ~60 us of dispatch each); temps: (S,) f32; keys:
+            (S+1, 2) raw PRNG keys — row ``s`` feeds slot ``s``'s chunk,
+            the last row feeds the decode (zeros where unused); rkeys:
+            (S, 2) per-request sampling keys.
             """
             def body(carry, xs):
                 caches, last_tok = carry
-                s, toks_s, f, temp, key = xs
+                s, toks_s, f, temp, key, rkey = xs
                 reset, valid, final, pre = (f[0] != 0, f[1], f[2] != 0,
                                             f[3] != 0)
                 sl = tf.take_slot(caches, s)
@@ -455,7 +571,7 @@ class Engine:
                     sl, prev = ops
                     sl, keep, tok, _ = chunk_slot_core(
                         params, sl, prev, toks_s, reset, valid, final,
-                        temp, key)
+                        temp, key, rkey, f[6])
                     return sl, keep, tok
 
                 def skip(ops):
@@ -470,14 +586,15 @@ class Engine:
             (caches, last_tok), ptoks = jax.lax.scan(
                 body, (caches, last_tok),
                 (jnp.arange(n_slots, dtype=jnp.int32), chunk_toks, flags,
-                 temps, keys[:n_slots]))
+                 temps, keys[:n_slots], rkeys))
 
             active = flags[:, 4] != 0
 
             def dec(ops):
                 caches, last_tok = ops
                 caches, last_tok, _ = decode_core(
-                    params, caches, last_tok, active, temps, keys[n_slots])
+                    params, caches, last_tok, active, temps, keys[n_slots],
+                    rkeys, flags[:, 5], flags[:, 6])
                 return caches, last_tok
 
             caches, last_tok = jax.lax.cond(
@@ -509,6 +626,9 @@ class Engine:
         # scheduler iterations since the last generate() call
         self.launch_count = 0
         self.iter_count = 0
+        self._frow_host = np.array([s in self.fault_slots
+                                    for s in range(self.max_slots)])
+        self.begin()
 
     # ------------------------------------------------------------------ API
     @property
@@ -523,380 +643,605 @@ class Engine:
             return -1
         return sum(sizes)
 
-    def generate(self, requests: List[Request]) -> List[Optional[List[int]]]:
-        """Run all requests to completion; returns generated token lists.
-
-        Per-request failure contract (DESIGN.md §14): a request aborted by a
-        per-slot exception during prefill or by the guard's ``fail_after``
-        escalation yields the ``None`` sentinel at its position — callers
-        never see an exception for a single bad request, and the remaining
-        slots finish unaffected (``self.request_errors`` carries the reason
-        strings). A decode-phase exception still raises: the decode step is
-        batch-global, so there is no per-slot blame to assign.
-        """
-        self._validate(requests)
-        t_gen0 = time.perf_counter()
-        self.launch_count = 0
-        self.iter_count = 0
-        self.ttft_s = [None] * len(requests)
-        queue = list(requests)
-        for r in queue:
-            r.out_tokens = []
-        req_index = {id(r): i for i, r in enumerate(requests)}
-
-        slots: List[Optional[Request]] = [None] * self.max_slots
-        counts = [0] * self.max_slots
-        offsets = [0] * self.max_slots      # chunked-prefill tokens written
-        decoding = [False] * self.max_slots  # prefill done, slot in decode
+    # -------------------------------------------- incremental session API
+    def begin(self) -> None:
+        """Reset scheduler state for a fresh session (also called by
+        ``__init__`` and ``generate``). The device-side cache is NOT
+        touched: admission hygiene (the prefill zero-reset / chunk reset
+        flag) guarantees a recycled slot is token-clean regardless of what
+        the previous session left in it."""
+        S = self.max_slots
+        self._reqs: List[Request] = []
+        self._req_index: Dict[int, int] = {}
+        self._queue: List[Request] = []
+        self._slots: List[Optional[Request]] = [None] * S
+        self._counts = [0] * S
+        self._offsets = [0] * S       # chunked-prefill tokens written
+        self._decoding = [False] * S  # prefill done, slot in decode
         # emitted tokens stay on device until drained:
         # ("p", scalar_dev_tok, req_idx) | ("d", (B,) dev_toks, per-slot idx)
-        pend: List[Tuple[str, Any, Any]] = []
-
-        guard_on = self.guard is not None
-        n_layers = self.cfg.n_layers
+        self._pend: List[Tuple[str, Any, Any]] = []
         # host-side degradation state, per (slot, layer); reset on recycle
-        pinned = np.zeros((self.max_slots, n_layers), bool)
+        self._pinned = np.zeros((S, self.cfg.n_layers), bool)
         for s in self.pin_slots:
-            pinned[s] = True
-        hard_counts = np.zeros((self.max_slots, n_layers), np.int64)
-        fail_steps = np.zeros(self.max_slots, np.int64)
-        failed = [False] * len(requests)
-        self.request_errors = [None] * len(requests)
-        frow_host = np.array([s in self.fault_slots
-                              for s in range(self.max_slots)])
+            self._pinned[s] = True
+        self._hard_counts = np.zeros((S, self.cfg.n_layers), np.int64)
+        self._fail_steps = np.zeros(S, np.int64)
+        self._rk_slot = np.zeros((S, 2), np.uint32)   # per-slot request key
+        self._lvl_slot = np.zeros(S, np.int32)        # per-slot ladder level
+        self._rkeys: List[np.ndarray] = []            # per-request key
+        self._levels: List[int] = []                  # per-request level
+        self.status: List[str] = []                   # per-request lifecycle
+        self.request_errors = []
+        self.ttft_s = []
+        self.launch_count = 0
+        self.iter_count = 0
+        self._t0 = time.perf_counter()
+        self._turnover = False
 
-        def reset_slot_guard(s: int) -> None:
-            pinned[s] = s in self.pin_slots
-            hard_counts[s] = 0
-            fail_steps[s] = 0
+    def submit(self, r: Request) -> int:
+        """Enqueue one request; returns its index in this session.
 
-        def fail_request(s: int, reason: str) -> None:
-            r = slots[s]
-            ri = req_index[id(r)]
-            failed[ri] = True
-            self.request_errors[ri] = reason
-            slots[s] = None
-            decoding[s] = False
-            counts[s] = 0
-            offsets[s] = 0
-            reset_slot_guard(s)
+        The request's sampling key is fixed here — ``fold_in(seed-derived
+        base, crc32(rid))`` — so two submissions with the same ``rid``
+        (e.g. a front-end retry) draw identical per-token keys.
+        """
+        _validate_requests([r], self.max_len)
+        ri = len(self._reqs)
+        self._reqs.append(r)
+        self._req_index[id(r)] = ri
+        r.out_tokens = []
+        self._queue.append(r)
+        self.status.append("queued")
+        self.request_errors.append(None)
+        self.ttft_s.append(None)
+        uid = _request_uid(r, ri)
+        self._rkeys.append(np.asarray(
+            jax.random.fold_in(self._sample_base, uid), np.uint32))
+        lvl = 0
+        if self.ladder is not None:
+            lvl = min(max(int(r.degrade_level), 0), self.ladder.n_levels - 1)
+        self._levels.append(lvl)
+        return ri
 
-        def note_guard(trips, hard, slot_cols) -> List[int]:
-            """Fold one step's (L, B) guard counters into the host state.
+    def cancel(self, r: Request, outcome: str = "cancelled") -> bool:
+        """Withdraw a queued or running request between steps.
 
-            slot_cols: [(slot, column-in-B)] mapping for this call (prefill
-            reports a single batch-1 column; decode reports all slots).
-            Returns slots whose request just crossed ``fail_after``.
-            """
-            t, h = jax.device_get((trips, hard))
-            t = np.asarray(t)
-            h = np.asarray(h)
-            self.guard_trip_counts += t.sum(axis=1).astype(np.int64)
-            self.guard_hard_counts += h.sum(axis=1).astype(np.int64)
-            dead = []
-            pol = self.degrade
-            for s, col in slot_cols:
-                hcol = h[:, col]
-                if not hcol.any():
-                    continue
-                hard_counts[s, hcol > 0] += 1
-                if pol is not None and pol.pin_after is not None:
-                    pinned[s] |= hard_counts[s] >= pol.pin_after
-                if pol is not None and pol.fail_after is not None:
-                    fail_steps[s] += 1
-                    if fail_steps[s] >= pol.fail_after:
-                        dead.append(s)
-            return dead
+        A running request's slot is freed host-side only: the next
+        occupant's admission reset (whole-slot zero-wipe on prefill / the
+        chunk ``reset`` flag) makes the recycle token-clean, so no device
+        work is needed — this is the PR 6 slot-recycling machinery doing
+        the cancellation for free. Tokens already emitted stay in
+        ``r.out_tokens`` as the partial stream. Returns False if the
+        request is unknown or already terminal."""
+        if outcome not in OUTCOMES[1:]:
+            raise ValueError(f"cancel outcome must be one of {OUTCOMES[1:]}")
+        ri = self._req_index.get(id(r))
+        if ri is None or self.status[ri] not in ("queued", "running"):
+            return False
+        if self.status[ri] == "queued":
+            self._queue.remove(r)
+        else:
+            s = next(i for i, o in enumerate(self._slots) if o is r)
+            self._free_slot(s)
+            self._turnover = True
+        self.status[ri] = outcome
+        return True
 
-        def drain():
-            if not pend:
-                return
-            vals = jax.device_get([e[1] for e in pend])
-            for (kind, _, meta), v in zip(pend, vals):
-                if kind == "p":
-                    requests[meta].out_tokens.append(int(v))
-                else:
-                    for s, ri in enumerate(meta):
-                        if ri is not None:
-                            requests[ri].out_tokens.append(int(v[s]))
-            pend.clear()
+    def expire_deadlines(self, now: float) -> int:
+        """Cancel every request (queued, mid-prefill or mid-decode) whose
+        ``deadline`` has passed on the caller's clock; returns the count."""
+        n = 0
+        live = list(self._queue) + [r for r in self._slots if r is not None]
+        for r in live:
+            if r.deadline is not None and now >= r.deadline:
+                if self.cancel(r, outcome="deadline_expired"):
+                    n += 1
+        return n
 
-        def note_first_token(r: Request, tok) -> None:
-            if self.record_ttft:
-                jax.block_until_ready(tok)
-                self.ttft_s[req_index[id(r)]] = time.perf_counter() - t_gen0
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(r is not None for r in self._slots)
 
-        def guard_args(s: int):
-            """(pin, frow) closure extras: batch-1 row ``s`` views."""
-            if not guard_on:
-                return ()
-            return (jnp.asarray(pinned[s:s + 1]),
-                    jnp.asarray(frow_host[s:s + 1]))
+    @property
+    def free_slots(self) -> int:
+        """Slots with no occupant AND no staged request waiting for one —
+        the front-end's admission headroom signal."""
+        return (sum(r is None for r in self._slots) - len(self._queue))
 
-        def fill_slots():
-            for s in range(self.max_slots):
-                while slots[s] is None and queue:
-                    r = queue.pop(0)
-                    reset_slot_guard(s)
-                    if self.chunk_size > 0:
-                        # chunked admit costs nothing here: the prompt
-                        # streams through the main loop one chunk per step,
-                        # interleaved with the other slots' decode steps
-                        slots[s] = r
-                        offsets[s] = 0
-                        counts[s] = 0
-                        decoding[s] = False
-                        continue
-                    prompt = np.asarray(r.prompt, np.int32)
-                    true_len = prompt.shape[0]
-                    bucket = (min(_pow2_bucket(true_len), self.max_len)
-                              if self._bucketed else true_len)
-                    padded = np.zeros((1, bucket), np.int32)
-                    padded[0, :true_len] = prompt
-                    # per-slot isolation: a prefill failure (bad request
-                    # reaching the forward, guard plumbing, OOM on an
-                    # oversized bucket) fails *this* request, not the batch;
-                    # the next occupant's zero-reset re-initialises the slot
-                    slots[s] = r
-                    try:
-                        self.launch_count += 1
-                        out = self._prefill(
-                            self.params, self.caches, self.last_tok,
-                            jnp.asarray(padded), true_len, s,
-                            float(r.temperature), self._next_key(),
-                            *guard_args(s))
-                    except Exception as e:     # noqa: BLE001
-                        fail_request(s, f"prefill failed: {e!r}")
-                        continue
-                    self.caches, self.last_tok, tok = out[:3]
-                    slots[s] = None
-                    if guard_on:
-                        dead = note_guard(out[3], out[4], [(s, 0)])
-                        if dead:
-                            slots[s] = r
-                            fail_request(
-                                s, "guard hard-fail during prefill")
-                            continue
-                    pend.append(("p", tok, req_index[id(r)]))
-                    note_first_token(r, tok)
-                    if r.max_new_tokens > 1:
-                        slots[s] = r
-                        counts[s] = 1
-                        decoding[s] = True
+    def result_of(self, r: Request):
+        """Terminal result: token list, RequestError, or None if live."""
+        ri = self._req_index.get(id(r))
+        if ri is None:
+            return None
+        st = self.status[ri]
+        if st == "failed":
+            return self.request_errors[ri]
+        if st in ("queued", "running"):
+            return None
+        return r.out_tokens
 
-        def prefill_chunks() -> bool:
-            """One chunk of progress for every still-prefilling slot;
-            returns True if any slot finished its prompt."""
-            finished = False
-            for s, r in enumerate(slots):
-                if r is None or decoding[s]:
-                    continue
-                prompt = np.asarray(r.prompt, np.int32)
-                off = offsets[s]
-                valid = min(self.chunk_size, prompt.shape[0] - off)
-                chunk = np.zeros((1, self.chunk_size), np.int32)
-                chunk[0, :valid] = prompt[off:off + valid]
-                is_final = off + valid >= prompt.shape[0]
-                try:
-                    self.launch_count += 1
-                    out = self._prefill_chunk(
-                        self.params, self.caches, self.last_tok,
-                        jnp.asarray(chunk), jnp.asarray(off == 0),
-                        jnp.asarray(valid, jnp.int32), jnp.asarray(is_final),
-                        s, float(r.temperature), self._next_key(),
-                        *guard_args(s))
-                except Exception as e:         # noqa: BLE001
-                    fail_request(s, f"prefill chunk failed: {e!r}")
-                    finished = True            # slot freed -> refill
-                    continue
-                self.caches, self.last_tok, tok = out[:3]
-                if guard_on:
-                    dead = note_guard(out[3], out[4], [(s, 0)])
-                    if dead:
-                        fail_request(s, "guard hard-fail during prefill")
-                        finished = True
-                        continue
-                offsets[s] = off + valid
-                if is_final:
-                    pend.append(("p", tok, req_index[id(r)]))
-                    note_first_token(r, tok)
-                    if r.max_new_tokens > 1:
-                        decoding[s] = True
-                        counts[s] = 1
-                    else:
-                        slots[s] = None
-                    finished = True
-            return finished
+    def status_of(self, r: Request) -> Optional[str]:
+        """Lifecycle state of a submitted request (None if unknown):
+        queued | running | completed | failed | cancelled | deadline_expired."""
+        ri = self._req_index.get(id(r))
+        return None if ri is None else self.status[ri]
 
-        def slot_state():
-            act = np.array([r is not None and decoding[s]
-                            for s, r in enumerate(slots)])
-            tmp = np.array([float(r.temperature) if r is not None else 0.0
-                            for r in slots], np.float32)
-            return act, jnp.asarray(act), jnp.asarray(tmp)
+    def error_of(self, r: Request) -> Optional[RequestError]:
+        ri = self._req_index.get(id(r))
+        return None if ri is None else self.request_errors[ri]
 
-        def fused_iteration() -> bool:
-            """One whole scheduler iteration through the single-launch
-            ``_step`` program (DESIGN.md §15): every still-prefilling slot
-            advances by one chunk AND the batch decode runs, in one jitted
-            dispatch. Token streams (and the PRNG draw order) are identical
-            to the per-call path. Returns False to route the iteration to
-            the per-call body instead: permanently if the step raises (the
-            fallback recovers per-slot failure isolation), or just for this
-            iteration when no slot is prefilling (pure decode is already a
-            single ``_decode`` launch)."""
-            nonlocal turnover
-            n_slots = self.max_slots
-            chunk_toks = np.zeros((n_slots, 1, self.chunk_size), np.int32)
-            resets = np.zeros(n_slots, bool)
-            valids = np.zeros(n_slots, np.int32)
-            finals = np.zeros(n_slots, bool)
-            prefilling = np.zeros(n_slots, bool)
-            act_after = np.zeros(n_slots, bool)
-            for s, r in enumerate(slots):
-                if r is None:
-                    continue
-                if decoding[s]:
-                    act_after[s] = True
-                    continue
-                prompt = np.asarray(r.prompt, np.int32)
-                off = offsets[s]
-                valid = min(self.chunk_size, prompt.shape[0] - off)
-                chunk_toks[s, 0, :valid] = prompt[off:off + valid]
-                resets[s] = off == 0
-                valids[s] = valid
-                # a slot finishing its prompt this iteration joins this
-                # same iteration's decode (matching the per-call scheduler)
-                finals[s] = off + valid >= prompt.shape[0]
-                prefilling[s] = True
-                if finals[s] and r.max_new_tokens > 1:
-                    act_after[s] = True
-            if not prefilling.any():
-                # pure-decode iteration: the per-call path is already a
-                # single ``_decode`` launch, and it skips ``_step``'s
-                # scan-over-slots slice traffic — route it there (this is
-                # NOT the failure fallback; the next mixed iteration fuses)
-                return False
-            do_decode = bool(act_after.any())
-            temps_now = np.array(
-                [float(r.temperature) if r is not None else 0.0
-                 for r in slots], np.float32)
-            # one packed (S, 5) transfer instead of five small ones, and one
-            # jitted key-chain dispatch instead of up to S+1 sequential
-            # splits + a stack — per-iteration host dispatch used to exceed
-            # the cost of a chunk forward (see draw_keys_fn). The key order
-            # (prefilling slots ascending, then the decode) matches the
-            # per-call path, so both consume the same PRNG stream.
-            flags = np.stack(
-                [resets.astype(np.int32), valids,
-                 finals.astype(np.int32), prefilling.astype(np.int32),
-                 act_after.astype(np.int32)], axis=1)
-            key_mask = np.append(prefilling, do_decode)
-            self.key, key_rows = self._draw_keys(self.key,
-                                                 jnp.asarray(key_mask))
-            meta_p = [req_index[id(slots[s])]
-                      if prefilling[s] and finals[s] else None
-                      for s in range(n_slots)]
-            meta_d = [req_index[id(slots[s])] if act_after[s] else None
-                      for s in range(n_slots)]
-            try:
-                self.launch_count += 1
-                caches, toks, ptoks = self._step(
-                    self.params, self.caches, self.last_tok,
-                    jnp.asarray(chunk_toks), jnp.asarray(flags),
-                    jnp.asarray(temps_now), key_rows)
-            except Exception:                  # noqa: BLE001
-                self._fused_ok = False
-                return False
-            self.caches = caches
-            self.last_tok = toks
-            if any(m is not None for m in meta_p):
-                pend.append(("d", ptoks, meta_p))
-            for s in range(n_slots):
-                if not prefilling[s]:
-                    continue
-                offsets[s] += int(valids[s])
-                if finals[s]:
-                    r = slots[s]
-                    note_first_token(r, ptoks)
-                    if r.max_new_tokens > 1:
-                        decoding[s] = True
-                        counts[s] = 1
-                    else:
-                        slots[s] = None
-                        turnover = True
-            if do_decode:
-                pend.append(("d", toks, meta_d))
-                for s in range(n_slots):
-                    if meta_d[s] is None:
-                        continue
-                    counts[s] += 1
-                    if counts[s] >= slots[s].max_new_tokens:
-                        slots[s] = None
-                        turnover = True
-            return True
+    def step(self, now: Optional[float] = None) -> bool:
+        """One scheduler iteration: expire deadlines (when ``now`` is
+        given), admit from the queue, advance every prefilling slot by one
+        chunk, run the batch decode. Returns True if any slot did work."""
+        if now is not None:
+            self.expire_deadlines(now)
+        self._fill_slots()
+        if not any(r is not None for r in self._slots):
+            return False
+        self.iter_count += 1
+        self._turnover = False
+        if self._fused_step and self._fused_ok and self._fused_iteration():
+            if self._turnover:
+                self._fill_slots()
+        else:
+            self._percall_iteration()
+        if len(self._pend) >= self.drain_every:
+            self.drain_pending()
+        return True
 
-        fill_slots()
-        steps = 0
-        while any(r is not None for r in slots):
-            self.iter_count += 1
-            turnover = False
-            if self._fused_step and self._fused_ok and fused_iteration():
-                if turnover:
-                    fill_slots()
+    def drain_pending(self) -> None:
+        """Move emitted tokens device→host into ``out_tokens`` lists."""
+        if not self._pend:
+            return
+        vals = jax.device_get([e[1] for e in self._pend])
+        for (kind, _, meta), v in zip(self._pend, vals):
+            if kind == "p":
+                self._reqs[meta].out_tokens.append(int(v))
             else:
-                act_host, active, temps = slot_state()
-                if prefill_chunks():
-                    # a slot finished prefilling (or freed at max_new==1):
-                    # refresh membership so it joins this iteration's decode
-                    # step — or admit the next request into the free slot
-                    fill_slots()
-                    act_host, active, temps = slot_state()
-                if act_host.any():
-                    # decode is batch-global: an exception here has no
-                    # per-slot blame and the donated cache may already be
-                    # consumed, so it propagates (per-request isolation
-                    # covers prefill + guard)
-                    self.launch_count += 1
-                    if guard_on:
-                        self.caches, toks, trips, hard = self._decode(
-                            self.params, self.caches, self.last_tok, active,
-                            temps, self._next_key(), jnp.asarray(pinned),
-                            jnp.asarray(frow_host))
-                        dead = note_guard(
-                            trips, hard,
-                            [(s, s) for s in range(self.max_slots)
-                             if act_host[s]])
-                    else:
-                        self.caches, toks = self._decode(
-                            self.params, self.caches, self.last_tok, active,
-                            temps, self._next_key())
-                        dead = []
-                    self.last_tok = toks
-                    pend.append(("d", toks,
-                                 [req_index[id(r)] if act_host[s] else None
-                                  for s, r in enumerate(slots)]))
-                    for s, r in enumerate(slots):
-                        if r is None or not act_host[s]:
-                            continue
-                        if s in dead:
-                            fail_request(s, "guard hard-fail during decode")
-                            turnover = True
-                            continue
-                        counts[s] += 1
-                        if counts[s] >= r.max_new_tokens:
-                            slots[s] = None
-                            turnover = True
-                if turnover:
-                    fill_slots()
-            if len(pend) >= self.drain_every:
-                drain()
+                for s, ri in enumerate(meta):
+                    if ri is not None:
+                        self._reqs[ri].out_tokens.append(int(v[s]))
+        self._pend.clear()
+
+    def generate(self, requests: List[Request]) -> List[Any]:
+        """Run all requests to completion; returns generated token lists.
+
+        Exactly ``begin()`` + submit-all + ``step()``-until-done, so the
+        batch API and the front-end's incremental session consume identical
+        PRNG streams and produce identical tokens.
+
+        Per-request failure contract (DESIGN.md §14/§16): a request aborted
+        by a per-slot exception during prefill, by a per-slot exception
+        during decode (isolated via solo re-probing — the rest of the batch
+        advances), or by the guard's ``fail_after`` escalation yields a
+        structured ``RequestError`` at its position — callers never see an
+        exception for a single bad request, and the remaining slots finish
+        unaffected (``self.request_errors`` carries the same objects).
+        """
+        self._validate(requests)
+        self.begin()
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while self.has_work():
+            self.step()
             steps += 1
             if steps > 100_000:
                 raise RuntimeError("serving engine ran away")
-        drain()
-        return [None if failed[i] else r.out_tokens
-                for i, r in enumerate(requests)]
+        self.drain_pending()
+        out = []
+        for r in requests:
+            ri = self._req_index[id(r)]
+            out.append(self.request_errors[ri]
+                       if self.status[ri] == "failed" else r.out_tokens)
+        return out
+
+    # ------------------------------------------------- scheduler internals
+    def _free_slot(self, s: int) -> None:
+        self._slots[s] = None
+        self._decoding[s] = False
+        self._counts[s] = 0
+        self._offsets[s] = 0
+        self._rk_slot[s] = 0
+        self._lvl_slot[s] = 0
+        self._reset_slot_guard(s)
+
+    def _reset_slot_guard(self, s: int) -> None:
+        self._pinned[s] = s in self.pin_slots
+        self._hard_counts[s] = 0
+        self._fail_steps[s] = 0
+
+    def _fail_request(self, s: int, err: RequestError) -> None:
+        r = self._slots[s]
+        ri = self._req_index[id(r)]
+        self.status[ri] = "failed"
+        self.request_errors[ri] = err
+        self._free_slot(s)
+
+    def _finish_request(self, s: int) -> None:
+        ri = self._req_index[id(self._slots[s])]
+        self.status[ri] = "completed"
+        self._free_slot(s)
+        self._turnover = True
+
+    def _note_guard(self, trips, hard, slot_cols) -> List[int]:
+        """Fold one step's (L, B) guard counters into the host state.
+
+        slot_cols: [(slot, column-in-B)] mapping for this call (prefill
+        reports a single batch-1 column; decode reports all slots).
+        Returns slots whose request just crossed ``fail_after``.
+        """
+        t, h = jax.device_get((trips, hard))
+        t = np.asarray(t)
+        h = np.asarray(h)
+        self.guard_trip_counts += t.sum(axis=1).astype(np.int64)
+        self.guard_hard_counts += h.sum(axis=1).astype(np.int64)
+        dead = []
+        pol = self.degrade
+        for s, col in slot_cols:
+            hcol = h[:, col]
+            if not hcol.any():
+                continue
+            self._hard_counts[s, hcol > 0] += 1
+            if pol is not None and pol.pin_after is not None:
+                self._pinned[s] |= self._hard_counts[s] >= pol.pin_after
+            if pol is not None and pol.fail_after is not None:
+                self._fail_steps[s] += 1
+                if self._fail_steps[s] >= pol.fail_after:
+                    dead.append(s)
+        return dead
+
+    def _guard_err(self, s: int, phase: str) -> RequestError:
+        layers_hit = np.nonzero(self._hard_counts[s])[0]
+        return RequestError(
+            reason=f"guard hard-fail during {phase}", phase=phase, slot=s,
+            layer=int(layers_hit[0]) if layers_hit.size else None,
+            retryable=False)
+
+    def _note_first_token(self, r: Request, tok) -> None:
+        if self.record_ttft:
+            jax.block_until_ready(tok)
+            self.ttft_s[self._req_index[id(r)]] = (
+                time.perf_counter() - self._t0)
+
+    def _guard_args(self, s: int):
+        """(pin, frow) closure extras: batch-1 row ``s`` views."""
+        if self.guard is None:
+            return ()
+        return (jnp.asarray(self._pinned[s:s + 1]),
+                jnp.asarray(self._frow_host[s:s + 1]))
+
+    def _guard_batch_args(self):
+        if self.guard is None:
+            return ()
+        return (jnp.asarray(self._pinned), jnp.asarray(self._frow_host))
+
+    def _admit(self, s: int, r: Request) -> None:
+        ri = self._req_index[id(r)]
+        self.status[ri] = "running"
+        self._rk_slot[s] = self._rkeys[ri]
+        self._lvl_slot[s] = self._levels[ri]
+        self._reset_slot_guard(s)
+
+    def _fill_slots(self) -> None:
+        guard_on = self.guard is not None
+        for s in range(self.max_slots):
+            while self._slots[s] is None and self._queue:
+                r = self._queue.pop(0)
+                self._admit(s, r)
+                if self.chunk_size > 0:
+                    # chunked admit costs nothing here: the prompt streams
+                    # through the main loop one chunk per step, interleaved
+                    # with the other slots' decode steps
+                    self._slots[s] = r
+                    self._offsets[s] = 0
+                    self._counts[s] = 0
+                    self._decoding[s] = False
+                    continue
+                prompt = np.asarray(r.prompt, np.int32)
+                true_len = prompt.shape[0]
+                bucket = (min(_pow2_bucket(true_len), self.max_len)
+                          if self._bucketed else true_len)
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :true_len] = prompt
+                # per-slot isolation: a prefill failure (bad request
+                # reaching the forward, guard plumbing, OOM on an
+                # oversized bucket) fails *this* request, not the batch;
+                # the next occupant's zero-reset re-initialises the slot
+                self._slots[s] = r
+                try:
+                    self.launch_count += 1
+                    out = self._prefill(
+                        self.params, self.caches, self.last_tok,
+                        jnp.asarray(padded), true_len, s,
+                        float(r.temperature), self._next_key(),
+                        jnp.asarray(self._rk_slot[s]),
+                        np.int32(self._lvl_slot[s]), *self._guard_args(s))
+                except Exception as e:     # noqa: BLE001
+                    self._fail_request(s, RequestError(
+                        reason=f"prefill failed: {e!r}", phase="prefill",
+                        slot=s))
+                    continue
+                self.caches, self.last_tok, tok = out[:3]
+                self._slots[s] = None
+                if guard_on:
+                    dead = self._note_guard(out[3], out[4], [(s, 0)])
+                    if dead:
+                        self._slots[s] = r
+                        self._fail_request(s, self._guard_err(s, "prefill"))
+                        continue
+                ri = self._req_index[id(r)]
+                self._pend.append(("p", tok, ri))
+                self._note_first_token(r, tok)
+                if r.max_new_tokens > 1:
+                    self._slots[s] = r
+                    self._counts[s] = 1
+                    self._decoding[s] = True
+                else:
+                    self._slots[s] = r
+                    self._finish_request(s)
+
+    def _prefill_chunks(self) -> bool:
+        """One chunk of progress for every still-prefilling slot;
+        returns True if any slot finished its prompt."""
+        guard_on = self.guard is not None
+        finished = False
+        for s, r in enumerate(self._slots):
+            if r is None or self._decoding[s]:
+                continue
+            prompt = np.asarray(r.prompt, np.int32)
+            off = self._offsets[s]
+            valid = min(self.chunk_size, prompt.shape[0] - off)
+            chunk = np.zeros((1, self.chunk_size), np.int32)
+            chunk[0, :valid] = prompt[off:off + valid]
+            is_final = off + valid >= prompt.shape[0]
+            try:
+                self.launch_count += 1
+                out = self._prefill_chunk(
+                    self.params, self.caches, self.last_tok,
+                    jnp.asarray(chunk), jnp.asarray(off == 0),
+                    jnp.asarray(valid, jnp.int32), jnp.asarray(is_final),
+                    s, float(r.temperature), self._next_key(),
+                    jnp.asarray(self._rk_slot[s]),
+                    np.int32(self._lvl_slot[s]), *self._guard_args(s))
+            except Exception as e:         # noqa: BLE001
+                self._fail_request(s, RequestError(
+                    reason=f"prefill chunk failed: {e!r}", phase="prefill",
+                    slot=s))
+                finished = True            # slot freed -> refill
+                continue
+            self.caches, self.last_tok, tok = out[:3]
+            if guard_on:
+                dead = self._note_guard(out[3], out[4], [(s, 0)])
+                if dead:
+                    self._fail_request(s, self._guard_err(s, "prefill"))
+                    finished = True
+                    continue
+            self._offsets[s] = off + valid
+            if is_final:
+                self._pend.append(("p", tok, self._req_index[id(r)]))
+                self._note_first_token(r, tok)
+                if r.max_new_tokens > 1:
+                    self._decoding[s] = True
+                    self._counts[s] = 1
+                else:
+                    self._finish_request(s)
+                finished = True
+        return finished
+
+    def _slot_state(self):
+        act = np.array([r is not None and self._decoding[s]
+                        for s, r in enumerate(self._slots)])
+        tmp = np.array([float(r.temperature) if r is not None else 0.0
+                        for r in self._slots], np.float32)
+        return act, jnp.asarray(act), jnp.asarray(tmp)
+
+    def _isolate_decode(self, act_host, temps, step_key, tok_idx):
+        """Assign per-slot blame for a failed batch decode (DESIGN.md §16).
+
+        The batch decode program is all-or-nothing: when it raises there is
+        no per-row error to read. Re-run the SAME compiled program once per
+        active slot under a solo active mask (the mask is a traced argument
+        — no recompile) and the SAME step key: each surviving row advances
+        exactly one token. In off mode the survivors' tokens are
+        bit-identical to what the batch step would have produced (per-row
+        logits are batch-invariant and the sampling key depends only on
+        (request id, token index)); in sim mode they are statistically
+        equivalent (the batch-global activation scale sees the already-
+        advanced rows). Slots whose solo probe still raises are returned
+        for the caller to fail with a retryable decode RequestError.
+        Best-effort by construction: if the original failure consumed the
+        donated cache buffer, the probes fail too and every active request
+        is failed rather than the engine wedging or the batch dying.
+        """
+        guard_on = self.guard is not None
+        toks = self.last_tok
+        dead: List[Tuple[int, Exception]] = []
+        for s in range(self.max_slots):
+            if not act_host[s]:
+                continue
+            solo = np.zeros(self.max_slots, bool)
+            solo[s] = True
+            try:
+                self.launch_count += 1
+                out = self._decode(
+                    self.params, self.caches, toks, jnp.asarray(solo),
+                    temps, step_key, jnp.asarray(self._rk_slot),
+                    jnp.asarray(tok_idx), jnp.asarray(self._lvl_slot),
+                    *self._guard_batch_args())
+                self.caches, toks = out[:2]
+                if guard_on:
+                    self._note_guard(out[2], out[3], [(s, s)])
+            except Exception as e:         # noqa: BLE001
+                dead.append((s, e))
+        self.last_tok = toks
+        return toks, dead
+
+    def _percall_iteration(self) -> None:
+        """The legacy multi-launch iteration body: per-slot chunk advances,
+        then one batch decode — now with per-slot decode failure isolation
+        (the fused path recovers it by falling back here)."""
+        guard_on = self.guard is not None
+        act_host, active, temps = self._slot_state()
+        if self._prefill_chunks():
+            # a slot finished prefilling (or freed at max_new==1): refresh
+            # membership so it joins this iteration's decode step — or
+            # admit the next request into the free slot
+            self._fill_slots()
+            act_host, active, temps = self._slot_state()
+        if not act_host.any():
+            if self._turnover:
+                self._fill_slots()
+            return
+        tok_idx = np.array(self._counts, np.int32)
+        step_key = self._next_key()
+        dead_errs: Dict[int, RequestError] = {}
+        gdead: List[int] = []
+        self.launch_count += 1
+        try:
+            out = self._decode(
+                self.params, self.caches, self.last_tok, active, temps,
+                step_key, jnp.asarray(self._rk_slot), jnp.asarray(tok_idx),
+                jnp.asarray(self._lvl_slot), *self._guard_batch_args())
+            self.caches, toks = out[:2]
+            if guard_on:
+                gdead = self._note_guard(
+                    out[2], out[3],
+                    [(s, s) for s in range(self.max_slots) if act_host[s]])
+            self.last_tok = toks
+        except Exception:                  # noqa: BLE001
+            toks, probed = self._isolate_decode(act_host, temps, step_key,
+                                               tok_idx)
+            for s, e in probed:
+                dead_errs[s] = RequestError(
+                    reason=f"decode step failed: {e!r}", phase="decode",
+                    slot=s)
+        self._pend.append(
+            ("d", toks,
+             [self._req_index[id(r)]
+              if act_host[s] and s not in dead_errs else None
+              for s, r in enumerate(self._slots)]))
+        for s in range(self.max_slots):
+            r = self._slots[s]
+            if r is None or not act_host[s]:
+                continue
+            if s in dead_errs:
+                self._fail_request(s, dead_errs[s])
+                self._turnover = True
+                continue
+            if s in gdead:
+                self._fail_request(s, self._guard_err(s, "decode"))
+                self._turnover = True
+                continue
+            self._counts[s] += 1
+            if self._counts[s] >= r.max_new_tokens:
+                self._finish_request(s)
+        if self._turnover:
+            self._fill_slots()
+
+    def _fused_iteration(self) -> bool:
+        """One whole scheduler iteration through the single-launch
+        ``_step`` program (DESIGN.md §15): every still-prefilling slot
+        advances by one chunk AND the batch decode runs, in one jitted
+        dispatch. Token streams (and the PRNG draw order) are identical
+        to the per-call path. Returns False to route the iteration to
+        the per-call body instead: permanently if the step raises (the
+        fallback recovers per-slot failure isolation), or just for this
+        iteration when no slot is prefilling (pure decode is already a
+        single ``_decode`` launch)."""
+        n_slots = self.max_slots
+        chunk_toks = np.zeros((n_slots, 1, self.chunk_size), np.int32)
+        resets = np.zeros(n_slots, bool)
+        valids = np.zeros(n_slots, np.int32)
+        finals = np.zeros(n_slots, bool)
+        prefilling = np.zeros(n_slots, bool)
+        act_after = np.zeros(n_slots, bool)
+        tok_idx = np.zeros(n_slots, np.int32)
+        for s, r in enumerate(self._slots):
+            if r is None:
+                continue
+            if self._decoding[s]:
+                act_after[s] = True
+                tok_idx[s] = self._counts[s]
+                continue
+            prompt = np.asarray(r.prompt, np.int32)
+            off = self._offsets[s]
+            valid = min(self.chunk_size, prompt.shape[0] - off)
+            chunk_toks[s, 0, :valid] = prompt[off:off + valid]
+            resets[s] = off == 0
+            valids[s] = valid
+            # a slot finishing its prompt this iteration joins this
+            # same iteration's decode (matching the per-call scheduler)
+            finals[s] = off + valid >= prompt.shape[0]
+            prefilling[s] = True
+            if finals[s] and r.max_new_tokens > 1:
+                act_after[s] = True
+                tok_idx[s] = 1   # first decode token after the prefill tok
+        if not prefilling.any():
+            # pure-decode iteration: the per-call path is already a
+            # single ``_decode`` launch, and it skips ``_step``'s
+            # scan-over-slots slice traffic — route it there (this is
+            # NOT the failure fallback; the next mixed iteration fuses)
+            return False
+        do_decode = bool(act_after.any())
+        temps_now = np.array(
+            [float(r.temperature) if r is not None else 0.0
+             for r in self._slots], np.float32)
+        # one packed (S, 7) transfer instead of seven small ones, and one
+        # jitted key-chain dispatch instead of up to S+1 sequential
+        # splits + a stack — per-iteration host dispatch used to exceed
+        # the cost of a chunk forward (see draw_keys_fn). The key order
+        # (prefilling slots ascending, then the decode) matches the
+        # per-call path, so both consume the same PRNG stream.
+        flags = np.stack(
+            [resets.astype(np.int32), valids,
+             finals.astype(np.int32), prefilling.astype(np.int32),
+             act_after.astype(np.int32), tok_idx,
+             self._lvl_slot.astype(np.int32)], axis=1)
+        key_mask = np.append(prefilling, do_decode)
+        self.key, key_rows = self._draw_keys(self.key,
+                                             jnp.asarray(key_mask))
+        meta_p = [self._req_index[id(self._slots[s])]
+                  if prefilling[s] and finals[s] else None
+                  for s in range(n_slots)]
+        meta_d = [self._req_index[id(self._slots[s])] if act_after[s]
+                  else None for s in range(n_slots)]
+        try:
+            self.launch_count += 1
+            caches, toks, ptoks = self._step(
+                self.params, self.caches, self.last_tok,
+                jnp.asarray(chunk_toks), jnp.asarray(flags),
+                jnp.asarray(temps_now), key_rows,
+                jnp.asarray(self._rk_slot))
+        except Exception:                  # noqa: BLE001
+            self._fused_ok = False
+            return False
+        self.caches = caches
+        self.last_tok = toks
+        if any(m is not None for m in meta_p):
+            self._pend.append(("d", ptoks, meta_p))
+        for s in range(n_slots):
+            if not prefilling[s]:
+                continue
+            self._offsets[s] += int(valids[s])
+            if finals[s]:
+                r = self._slots[s]
+                self._note_first_token(r, ptoks)
+                if r.max_new_tokens > 1:
+                    self._decoding[s] = True
+                    self._counts[s] = 1
+                else:
+                    self._finish_request(s)
+        if do_decode:
+            self._pend.append(("d", toks, meta_d))
+            for s in range(n_slots):
+                if meta_d[s] is None or self._slots[s] is None:
+                    continue
+                self._counts[s] += 1
+                if self._counts[s] >= self._slots[s].max_new_tokens:
+                    self._finish_request(s)
+        return True
 
     # ------------------------------------------------------------- helpers
     def _validate(self, requests: List[Request]) -> None:
@@ -909,7 +1254,9 @@ class Engine:
 
 class LoopEngine:
     """Frozen seed engine: per-slot batch-1 caches, one decode dispatch per
-    slot per token, host sync per sampled token. Reference/baseline only.
+    slot per token, host sync per sampled token. Reference/baseline only —
+    only the shared RequestError failure contract was retrofitted; the token
+    math and PRNG draws of the healthy path are untouched.
 
     Known seed quirk (kept frozen): a request with ``max_new_tokens == 1``
     emits 2 tokens — the slot is occupied unconditionally after prefill and
@@ -929,6 +1276,7 @@ class LoopEngine:
         mode = cim_mode if cim_mode is not None else cfg.cim.mode
         self.deployed = _resolve_deploy(deploy, mode)
         self.params = _maybe_deploy(cfg, params, self.deployed)
+        self.request_errors: List[Optional[RequestError]] = []
         deployed = self.deployed
 
         def prefill_fn(params, batch, caches, key):
@@ -949,15 +1297,22 @@ class LoopEngine:
         self._decode = jax.jit(decode_fn, donate_argnums=(2,))
 
     # ------------------------------------------------------------------ API
-    def generate(self, requests: List[Request]) -> List[List[int]]:
-        """Run all requests to completion; returns generated token lists."""
+    def generate(self, requests: List[Request]) -> List[Any]:
+        """Run all requests to completion; returns generated token lists.
+
+        Shares the fused engine's failure contract: a per-slot prefill or
+        decode exception yields a ``RequestError`` at that request's
+        position (mirrored in ``self.request_errors``) and frees the slot;
+        the loop engine's per-slot dispatch makes the decode isolation
+        trivial — no probing needed."""
         _validate_requests(requests, self.max_len)
         cfg = self.cfg
         queue = list(requests)
         for r in queue:
             r.out_tokens = []
-        results: List[List[int]] = [None] * len(requests)  # type: ignore
+        results: List[Any] = [None] * len(requests)
         req_index = {id(r): i for i, r in enumerate(requests)}
+        self.request_errors = [None] * len(requests)
 
         # one cache per slot (batch=1 caches, concatenated logically)
         slots: List[Optional[Request]] = [None] * self.max_slots
@@ -965,15 +1320,28 @@ class LoopEngine:
         last_tok = [0] * self.max_slots
         steps = 0
 
+        def fail(s: int, r: Request, phase: str, e: Exception) -> None:
+            ri = req_index[id(r)]
+            err = RequestError(reason=f"{phase} failed: {e!r}", phase=phase,
+                               slot=s)
+            self.request_errors[ri] = err
+            results[ri] = err
+            slots[s] = None
+
         def try_fill_slots():
             for s in range(self.max_slots):
                 if slots[s] is None and queue:
                     r = queue.pop(0)
                     slots[s] = r
                     fresh = tf.init_caches(cfg, 1, self.max_len)
-                    logits, caches[s] = self._prefill(
-                        self.params, {"tokens": jnp.asarray(r.prompt)[None]},
-                        fresh, self._next_key())
+                    try:
+                        logits, caches[s] = self._prefill(
+                            self.params,
+                            {"tokens": jnp.asarray(r.prompt)[None]},
+                            fresh, self._next_key())
+                    except Exception as e:     # noqa: BLE001
+                        fail(s, r, "prefill", e)
+                        continue
                     last_tok[s] = self._sample(logits[0], r.temperature)
                     r.out_tokens.append(int(last_tok[s]))
 
@@ -985,9 +1353,13 @@ class LoopEngine:
                 r = slots[s]
                 if r is None:
                     continue
-                logits, caches[s] = self._decode(
-                    self.params, jnp.asarray([[last_tok[s]]], jnp.int32),
-                    caches[s], self._next_key())
+                try:
+                    logits, caches[s] = self._decode(
+                        self.params, jnp.asarray([[last_tok[s]]], jnp.int32),
+                        caches[s], self._next_key())
+                except Exception as e:         # noqa: BLE001
+                    fail(s, r, "decode", e)
+                    continue
                 tok = self._sample(logits[0], r.temperature)
                 r.out_tokens.append(int(tok))
                 last_tok[s] = tok

@@ -1,0 +1,119 @@
+"""Structured per-request serving records + tail-latency summaries.
+
+Every request that touches the front-end ends with exactly ONE
+``RequestRecord`` whose ``outcome`` is one of the engine's terminal
+vocabulary ({completed, failed, cancelled, deadline_expired, shed}) — the
+zero-lost-requests invariant the overload soak gates on is literally
+"len(records) == len(submissions) and every outcome is terminal".
+
+Records carry the co-design dimensions next to the latency ones: the ladder
+level / vote count a request was admitted at (the paper's accuracy/energy
+knob, DESIGN.md §16) sits beside its queue wait and TTFT, so a bench run
+can show what the degraded admissions bought. Ladder transitions are logged
+separately (``MetricsLog.transitions``) with the queue depth that triggered
+them.
+
+Kept dependency-free (stdlib only): the front-end imports it under asyncio,
+the benches import it for BENCH_*.json summaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+def percentile(xs: List[float], q: float) -> Optional[float]:
+    """Nearest-rank percentile (q in [0, 100]); None on empty input.
+
+    Nearest-rank (not interpolated) so a p99 over a handful of samples is
+    an actual observed latency, never an extrapolation past the max.
+    """
+    if not xs:
+        return None
+    s = sorted(xs)
+    if len(s) == 1:
+        return s[0]
+    rank = max(0, min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[rank]
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's lifecycle, closed exactly once."""
+
+    rid: str
+    outcome: str = "pending"          # terminal: engine.OUTCOMES
+    reason: Optional[str] = None      # shed/cancel/failure detail
+    submitted_s: float = 0.0          # clock at front-end submit
+    admitted_s: Optional[float] = None   # clock at slot admission
+    finished_s: Optional[float] = None   # clock at terminal outcome
+    queue_wait_s: Optional[float] = None
+    ttft_s: Optional[float] = None    # submit -> first streamed token
+    tps: Optional[float] = None       # decode tokens/s (admit -> finish)
+    tokens_out: int = 0
+    degrade_level: int = 0            # ladder level at admission
+    votes_used: Optional[int] = None  # majority-vote count at that level
+    retries: int = 0                  # failure-retry attempts consumed
+
+    def close(self, outcome: str, now: float,
+              reason: Optional[str] = None) -> "RequestRecord":
+        self.outcome = outcome
+        self.finished_s = now
+        if reason is not None:
+            self.reason = reason
+        if self.admitted_s is not None and self.tokens_out > 1:
+            dt = now - self.admitted_s
+            if dt > 0:
+                self.tps = (self.tokens_out - 1) / dt
+        return self
+
+
+@dataclasses.dataclass
+class LadderTransition:
+    t_s: float
+    level_from: int
+    level_to: int
+    queue_depth: int
+
+
+class MetricsLog:
+    """Append-only request records + ladder transitions + summary()."""
+
+    def __init__(self) -> None:
+        self.records: List[RequestRecord] = []
+        self.transitions: List[LadderTransition] = []
+
+    def open(self, rid: str, now: float) -> RequestRecord:
+        rec = RequestRecord(rid=rid, submitted_s=now)
+        self.records.append(rec)
+        return rec
+
+    def note_transition(self, now: float, frm: int, to: int,
+                        depth: int) -> None:
+        self.transitions.append(LadderTransition(now, frm, to, depth))
+
+    def summary(self) -> Dict[str, object]:
+        recs = self.records
+        by_outcome: Dict[str, int] = {}
+        for r in recs:
+            by_outcome[r.outcome] = by_outcome.get(r.outcome, 0) + 1
+        waits = [r.queue_wait_s for r in recs if r.queue_wait_s is not None]
+        ttfts = [r.ttft_s for r in recs if r.ttft_s is not None]
+        tpss = [r.tps for r in recs if r.tps is not None]
+        return {
+            "n_requests": len(recs),
+            "outcomes": by_outcome,
+            "open_requests": sum(r.outcome == "pending" for r in recs),
+            "queue_wait_p50_s": percentile(waits, 50),
+            "queue_wait_p99_s": percentile(waits, 99),
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p99_s": percentile(ttfts, 99),
+            "tps_mean": (sum(tpss) / len(tpss)) if tpss else None,
+            "degraded_admissions": sum(r.degrade_level > 0 for r in recs
+                                       if r.admitted_s is not None),
+            "retries_total": sum(r.retries for r in recs),
+            "ladder_transitions": len(self.transitions),
+            "shed_fraction": (by_outcome.get("shed", 0) / len(recs)
+                              if recs else 0.0),
+        }

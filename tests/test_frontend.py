@@ -1,0 +1,483 @@
+"""Resilient async front-end suite (DESIGN.md §16).
+
+Covers the front-end's whole outcome vocabulary on a deterministic
+injected clock: bounded admission with shed-with-reason, deadlines and
+TTFT budgets (queued, mid-prefill, mid-decode), client cancellation,
+deterministic retry-with-backoff under a stable rid, the load-adaptive
+vote-degradation ladder (climb above the high watermark, descend below
+the low one, full-vote recovery), graceful drain bounded by the drain
+deadline, and the asyncio streaming path end to end.
+
+The scheduler is driven through ``Frontend.tick(now)`` with an explicit
+fake clock — every timing-sensitive assertion is exact, never sleeping.
+"""
+
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.sac import DegradeLadder
+from repro.models.model import build
+from repro.serving.engine import OUTCOMES, Engine, Request, RequestError
+from repro.serving.frontend import Frontend
+from repro.serving.metrics import MetricsLog, percentile
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=256,
+                              vocab_size=128, n_heads=4, n_kv_heads=2,
+                              head_dim=32)
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class Clock:
+    """Injectable fake clock; tests advance it explicitly."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("cim_mode", "off")
+    kw.setdefault("seed", 0)
+    kw.setdefault("chunk_size", 0)
+    return Engine(cfg, params, **kw)
+
+
+def _drive(fe, clock, dt=0.01, limit=1000):
+    steps = 0
+    while fe.pending():
+        fe.tick(clock.t)
+        clock.t += dt
+        steps += 1
+        assert steps < limit, "front-end wedged"
+
+
+def _prompt(cfg, rng, n=6):
+    return list(rng.integers(0, cfg.vocab_size, n))
+
+
+# ------------------------------------------------------- admission bound
+
+
+def test_overflow_shed_with_reason_and_all_terminal(setup):
+    """Submissions past queue_limit shed synchronously with a structured
+    reason; after the run every request holds exactly one terminal outcome
+    (the zero-lost invariant) and the sheds never touched a slot."""
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params), queue_limit=3, high_watermark=2,
+                  low_watermark=1, clock=clock)
+    rng = np.random.default_rng(0)
+    tks = [fe.submit(_prompt(cfg, rng), 4, rid=f"r{i}") for i in range(5)]
+    shed = [t for t in tks if t.outcome == "shed"]
+    assert len(shed) == 2
+    for t in shed:
+        assert t.done.is_set()
+        assert "admission queue full" in t.record.reason
+        assert t.record.admitted_s is None
+    _drive(fe, clock)
+    assert all(t.done.is_set() for t in tks)
+    assert all(t.outcome in OUTCOMES for t in tks)
+    assert [t.outcome for t in tks].count("completed") == 3
+    # metrics carry one closed record per submission, none left pending
+    s = fe.metrics.summary()
+    assert s["n_requests"] == 5 and s["open_requests"] == 0
+    assert s["outcomes"] == {"completed": 3, "shed": 2}
+
+
+def test_frontend_matches_plain_engine_tokens(setup):
+    """Tokens served through the front-end match engine.generate for the
+    same rids/prompts — the front-end adds scheduling, never token drift."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    prompts = [np.asarray(_prompt(cfg, rng), np.int32) for _ in range(3)]
+    ref = _engine(cfg, params).generate(
+        [Request(prompt=p.copy(), max_new_tokens=5, temperature=0.7,
+                 rid=f"m{i}") for i, p in enumerate(prompts)])
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params), queue_limit=4, high_watermark=3,
+                  low_watermark=1, clock=clock)
+    tks = [fe.submit(list(p), 5, temperature=0.7, rid=f"m{i}")
+           for i, p in enumerate(prompts)]
+    _drive(fe, clock)
+    assert [t.tokens for t in tks] == ref
+
+
+# --------------------------------------------- deadlines and TTFT budgets
+
+
+def test_deadline_expires_queued_request(setup):
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params, max_slots=1), queue_limit=4,
+                  high_watermark=3, low_watermark=1, clock=clock)
+    rng = np.random.default_rng(2)
+    long = fe.submit(_prompt(cfg, rng), 20, rid="hog")
+    late = fe.submit(_prompt(cfg, rng), 4, rid="late", timeout_s=0.5)
+    fe.tick(clock.t)          # hog takes the only slot; late queued
+    clock.t = 1.0             # late's deadline passes while queued
+    _drive(fe, clock)
+    assert long.outcome == "completed"
+    assert late.outcome == "deadline_expired"
+    assert "while queued" in late.record.reason
+    assert late.tokens == []
+
+
+def test_deadline_expires_mid_decode_with_partial_stream(setup):
+    """A decoding request killed by its deadline keeps the tokens it
+    already streamed; the slot's next occupant is unaffected."""
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params, max_slots=1), queue_limit=4,
+                  high_watermark=3, low_watermark=1, clock=clock)
+    rng = np.random.default_rng(3)
+    t = fe.submit(_prompt(cfg, rng), 30, rid="dl", timeout_s=0.05)
+    nxt = fe.submit(_prompt(cfg, rng), 4, rid="next")
+    steps = 0
+    while fe.pending() and steps < 500:
+        fe.tick(clock.t)
+        clock.t += 0.02       # deadline hits after ~2-3 decode steps
+        steps += 1
+    assert t.outcome == "deadline_expired"
+    assert 0 < len(t.tokens) < 30         # partial stream delivered
+    assert nxt.outcome == "completed" and len(nxt.tokens) == 4
+
+
+def test_ttft_budget_mid_prefill(setup):
+    """TTFT budget expiry cancels a request that produced no token yet —
+    including one the engine already admitted — as deadline_expired."""
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params, max_slots=1), queue_limit=4,
+                  high_watermark=3, low_watermark=1, clock=clock,
+                  default_ttft_budget_s=0.5)
+    rng = np.random.default_rng(4)
+    hog = fe.submit(_prompt(cfg, rng), 25, rid="hog2",
+                    ttft_budget_s=1000.0)
+    starved = fe.submit(_prompt(cfg, rng), 4, rid="starved")
+    fe.tick(clock.t)
+    clock.t = 0.9             # starved still queued, budget blown
+    _drive(fe, clock, dt=0.001)
+    assert starved.outcome == "deadline_expired"
+    assert "TTFT budget" in starved.record.reason
+    assert hog.outcome == "completed"
+
+
+# ----------------------------------------------------------- cancellation
+
+
+def test_client_cancel_queued_and_running(setup):
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params, max_slots=1), queue_limit=4,
+                  high_watermark=3, low_watermark=1, clock=clock)
+    rng = np.random.default_rng(5)
+    running = fe.submit(_prompt(cfg, rng), 30, rid="run")
+    queued = fe.submit(_prompt(cfg, rng), 4, rid="park")
+    fe.tick(clock.t)
+    queued.cancel()
+    fe.tick(clock.t)
+    assert queued.outcome == "cancelled"
+    assert "client" in queued.record.reason
+    # let the running one emit, then cancel it mid-decode
+    steps = 0
+    while len(running.tokens) < 2 and steps < 200:
+        fe.tick(clock.t)
+        steps += 1
+    running.cancel()
+    _drive(fe, clock)
+    assert running.outcome == "cancelled"
+    assert 2 <= len(running.tokens) < 30
+
+
+# ------------------------------------------------------------------ retry
+
+
+def _flaky_engine(cfg, params):
+    """Engine whose decode fails while slot 0 is live until the first
+    failure is recorded — the victim's isolation probe sees the fault, the
+    retry runs clean (a deterministic transient)."""
+    eng = _engine(cfg, params, max_slots=1, fused_step=False)
+    real = eng._decode
+
+    def flaky(params_, caches, last_tok, active, temps, key, rkeys,
+              tok_idx, lvls, pin=None, frow=None):
+        if not any(e is not None for e in eng.request_errors) \
+                and bool(np.asarray(active)[0]):
+            raise RuntimeError("injected transient decode fault")
+        return real(params_, caches, last_tok, active, temps, key, rkeys,
+                    tok_idx, lvls, pin=pin, frow=frow)
+
+    eng._decode = flaky
+    return eng
+
+
+def test_retry_replays_bit_identical_stream(setup):
+    """A retryable decode failure is retried under the same rid after
+    backoff; sampling keys derive from crc32(rid), so the delivered stream
+    equals a fault-free engine's bit for bit at temperature > 0, and the
+    already-delivered prefix is never re-emitted."""
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_flaky_engine(cfg, params), queue_limit=4,
+                  high_watermark=3, low_watermark=1, clock=clock,
+                  max_retries=1, retry_backoff_s=0.1)
+    rng = np.random.default_rng(6)
+    prompt = np.asarray(_prompt(cfg, rng), np.int32)
+    t = fe.submit(list(prompt), 6, temperature=0.9, rid="retry-me")
+    _drive(fe, clock)
+    assert t.outcome == "completed"
+    assert t.record.retries == 1
+    assert t.error is not None and t.error.retryable  # last failure kept
+    (ref,) = _engine(cfg, params, max_slots=1, fused_step=False).generate(
+        [Request(prompt=prompt.copy(), max_new_tokens=6, temperature=0.9,
+                 rid="retry-me")])
+    assert t.tokens == ref
+    # stream delivered each token exactly once despite the replayed prefix
+    assert len(t.tokens) == 6
+
+
+def test_retries_exhausted_ends_failed(setup):
+    """A fault that outlives max_retries ends in exactly one 'failed'
+    outcome carrying the structured RequestError."""
+    cfg, params = setup
+    eng = _engine(cfg, params, max_slots=1, fused_step=False)
+    real = eng._decode
+
+    def always(params_, caches, last_tok, active, temps, key, rkeys,
+               tok_idx, lvls, pin=None, frow=None):
+        if bool(np.asarray(active)[0]):
+            raise RuntimeError("persistent decode fault")
+        return real(params_, caches, last_tok, active, temps, key, rkeys,
+                    tok_idx, lvls, pin=pin, frow=frow)
+
+    eng._decode = always
+    clock = Clock()
+    fe = Frontend(eng, queue_limit=4, high_watermark=3, low_watermark=1,
+                  clock=clock, max_retries=2, retry_backoff_s=0.01)
+    rng = np.random.default_rng(7)
+    t = fe.submit(_prompt(cfg, rng), 4, rid="doomed")
+    _drive(fe, clock)
+    assert t.outcome == "failed"
+    assert t.record.retries == 2
+    assert isinstance(t.error, RequestError)
+    assert "persistent decode fault" in t.error.reason
+
+
+def test_oversize_prompt_fails_without_retry(setup):
+    """Engine-submit validation failures are terminal and non-retryable:
+    phase='submit', zero retries burned."""
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params, max_len=16), queue_limit=4,
+                  high_watermark=3, low_watermark=1, clock=clock,
+                  max_retries=3)
+    t = fe.submit(list(range(64)), 4, rid="toolong")
+    fe.tick(clock.t)
+    assert t.outcome == "failed"
+    assert t.error.phase == "submit" and t.error.retryable is False
+    assert t.record.retries == 0
+
+
+# ------------------------------------------------------------- the ladder
+
+
+def test_ladder_climbs_degrades_and_recovers(setup):
+    """Backlog above the high watermark climbs the ladder one rung per
+    tick and admissions run at reduced votes; once the queue drains below
+    the low watermark the ladder walks back and a fresh admission is at
+    full votes again — with both transitions logged."""
+    cfg, params = setup
+    eng = _engine(cfg, params, ladder=DegradeLadder(votes=(None, 3, 1)))
+    clock = Clock()
+    fe = Frontend(eng, queue_limit=8, high_watermark=4, low_watermark=2,
+                  clock=clock)
+    rng = np.random.default_rng(8)
+    burst = [fe.submit(_prompt(cfg, rng), 3, rid=f"b{i}") for i in range(8)]
+    _drive(fe, clock)
+    full = fe._full_votes
+    votes = [t.record.votes_used for t in burst]
+    assert any(v < full for v in votes), votes        # degradation engaged
+    assert all(t.outcome == "completed" for t in burst)
+    # recovery is hysteretic: one rung per tick below the low watermark, so
+    # idle ticks walk the ladder back down (the last in-flight requests may
+    # finish before enough depth<low ticks have elapsed)
+    for _ in range(eng.ladder.n_levels):
+        fe.tick(clock.t)
+    assert fe.level == 0
+    late = fe.submit(_prompt(cfg, rng), 3, rid="late")
+    _drive(fe, clock)
+    assert late.record.votes_used == full
+    assert late.record.degrade_level == 0
+    ups = [tr for tr in fe.metrics.transitions if tr.level_to > tr.level_from]
+    downs = [tr for tr in fe.metrics.transitions if tr.level_to < tr.level_from]
+    assert ups and downs
+    assert all(tr.queue_depth >= 4 for tr in ups)     # climbed under load
+
+
+def test_ladder_level0_rows_bit_identical_without_degraded_neighbors(setup):
+    """A ladder engine with every request at rung 0 is bit-identical to a
+    ladder-free engine in sim mode. (Per-row isolation inside a mixed
+    batch holds at the layer level but NOT end-to-end in sim: the
+    activation quantization scale is batch-global, so a degraded neighbor
+    perturbs every row's scale — see DESIGN.md §16.)"""
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    prompts = [np.asarray(_prompt(cfg, rng), np.int32) for _ in range(2)]
+
+    def reqs():
+        return [Request(prompt=p.copy(), max_new_tokens=4, rid=f"z{i}")
+                for i, p in enumerate(prompts)]
+
+    plain = _engine(cfg, params, cim_mode="sim").generate(reqs())
+    laddered = _engine(cfg, params, cim_mode="sim",
+                       ladder=DegradeLadder()).generate(reqs())
+    assert plain == laddered
+
+
+def test_ladder_excludes_guard_and_fused_layer(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="guard"):
+        _engine(cfg, params, cim_mode="sim", guard=True,
+                ladder=DegradeLadder())
+    fused_cfg = dataclasses.replace(setup[0], fuse_layer=True)
+    with pytest.raises(ValueError, match="fuse_layer"):
+        Engine(fused_cfg, params, max_slots=2, max_len=48, cim_mode="sim",
+               seed=0, chunk_size=0, ladder=DegradeLadder())
+
+
+def test_vote_drop_noise_monotonic():
+    """Fewer CB votes -> strictly more extra output-referred noise; full
+    votes (rung 0 / None) add exactly zero."""
+    from repro.core.cim import vote_drop_extra_std_int
+    from repro.core.sac import get_policy
+
+    spec = get_policy("paper_sac").spec_for_role("mlp_in")
+    assert vote_drop_extra_std_int(spec, 128, None) == 0.0
+    s3 = vote_drop_extra_std_int(spec, 128, 3)
+    s1 = vote_drop_extra_std_int(spec, 128, 1)
+    assert 0.0 < s3 < s1
+    with pytest.raises(ValueError):
+        vote_drop_extra_std_int(spec, 128, 0)
+
+
+# ---------------------------------------------------------- drain/shutdown
+
+
+def test_stop_sheds_new_work_and_drains_accepted(setup):
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params), queue_limit=4, high_watermark=3,
+                  low_watermark=1, clock=clock, drain_deadline_s=100.0)
+    rng = np.random.default_rng(10)
+    accepted = fe.submit(_prompt(cfg, rng), 4, rid="in")
+    fe.stop()
+    late = fe.submit(_prompt(cfg, rng), 4, rid="late")
+    assert late.outcome == "shed" and "draining" in late.record.reason
+    _drive(fe, clock)
+    assert accepted.outcome == "completed" and len(accepted.tokens) == 4
+
+
+def test_drain_deadline_cancels_stragglers(setup):
+    """Work that outlives the drain deadline is cancelled — terminal, not
+    wedged — whether queued or mid-flight."""
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params, max_slots=1), queue_limit=4,
+                  high_watermark=3, low_watermark=1, clock=clock,
+                  drain_deadline_s=0.5)
+    rng = np.random.default_rng(11)
+    flying = fe.submit(_prompt(cfg, rng), 500 // 20, rid="fly")
+    parked = fe.submit(_prompt(cfg, rng), 4, rid="park")
+    fe.tick(clock.t)
+    fe.stop()                      # drain_by = 0.5 on the fake clock
+    clock.t = 1.0
+    fe.tick(clock.t)
+    assert flying.outcome == "cancelled"
+    assert parked.outcome == "cancelled"
+    assert "drain deadline" in flying.record.reason
+    assert fe.pending() == 0
+
+
+# ------------------------------------------------------- asyncio plumbing
+
+
+def test_async_run_streams_and_drains(setup):
+    """End-to-end through asyncio: concurrent submissions stream tokens as
+    they decode, client cancel resolves awaiting consumers, stop() drains
+    and run() returns."""
+    cfg, params = setup
+    fe = Frontend(_engine(cfg, params), queue_limit=4, high_watermark=3,
+                  low_watermark=1)
+    rng = np.random.default_rng(12)
+
+    async def main():
+        runner = asyncio.create_task(fe.run())
+        a = fe.submit(_prompt(cfg, rng), 5, rid="a")
+        b = fe.submit(_prompt(cfg, rng), 40, rid="b")
+        streamed = [tok async for tok in a.stream()]
+        b.cancel()
+        await b.wait()
+        fe.stop()
+        await runner
+        return a, b, streamed
+
+    a, b, streamed = asyncio.run(asyncio.wait_for(main(), 300))
+    assert a.outcome == "completed"
+    assert streamed == a.tokens and len(streamed) == 5
+    assert a.result() == streamed
+    assert b.outcome == "cancelled"
+    with pytest.raises(RuntimeError, match="cancelled"):
+        b.result()
+
+
+# ---------------------------------------------------------------- metrics
+
+
+def test_metrics_records_and_percentiles(setup):
+    cfg, params = setup
+    clock = Clock()
+    fe = Frontend(_engine(cfg, params), queue_limit=8, high_watermark=6,
+                  low_watermark=2, clock=clock)
+    rng = np.random.default_rng(13)
+    tks = [fe.submit(_prompt(cfg, rng), 3, rid=f"m{i}") for i in range(4)]
+    _drive(fe, clock)
+    for t in tks:
+        r = t.record
+        assert r.outcome == "completed"
+        assert r.queue_wait_s is not None and r.queue_wait_s >= 0
+        assert r.ttft_s is not None and r.ttft_s >= r.queue_wait_s
+        assert r.tokens_out == 3
+        assert r.finished_s is not None
+    s = fe.metrics.summary()
+    assert s["queue_wait_p99_s"] >= s["queue_wait_p50_s"]
+    assert s["open_requests"] == 0
+    # percentile: nearest-rank, never extrapolates past the observed max
+    assert percentile([], 50) is None
+    assert percentile([3.0], 99) == 3.0
+    assert percentile([1.0, 2.0, 10.0], 99) == 10.0
+    assert percentile([1.0, 2.0, 10.0], 50) == 2.0
+
+
+def test_metrics_log_close_once_semantics():
+    log = MetricsLog()
+    rec = log.open("x", 1.0)
+    rec.admitted_s = 2.0
+    rec.tokens_out = 5
+    rec.close("completed", 4.0)
+    assert rec.tps == pytest.approx(4 / 2.0)
+    assert log.summary()["outcomes"] == {"completed": 1}

@@ -28,7 +28,7 @@ from repro.core.guard import GuardSpec, _retry_spec, checksum_trips
 from repro.core.cim import CIMSpec
 from repro.models.layers import Ctx, dense
 from repro.models.model import build
-from repro.serving.engine import DegradePolicy, Engine, Request
+from repro.serving.engine import DegradePolicy, Engine, Request, RequestError
 
 
 def _tiny_dense_cfg(**over):
@@ -279,17 +279,21 @@ def test_engine_degradation_ladder_end_to_end(guard_setup):
 
 def test_engine_fail_after_returns_sentinel_not_exception(guard_setup):
     """DegradePolicy.fail_after: the persistently-faulted request comes back
-    as None with a reason string; the rest of the batch completes."""
+    as a structured RequestError; the rest of the batch completes. A guard
+    hard-fail is a persistent analog fault, so it is marked non-retryable
+    (the front-end's retry loop skips it)."""
     cfg, params = guard_setup
     fault = FaultSpec(transient_mag=4.0)
     d = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0,
                guard=True, fault=fault, fault_slots={1},
                degrade=DegradePolicy(pin_after=None, fail_after=2))
     out = d.generate(_reqs())
-    assert out[1] is None
-    assert out[0] is not None and out[2] is not None
-    assert d.request_errors[1] is not None
-    assert "hard-fail" in d.request_errors[1]
+    assert isinstance(out[1], RequestError)
+    assert isinstance(out[0], list) and isinstance(out[2], list)
+    assert d.request_errors[1] is out[1]
+    assert "hard-fail" in d.request_errors[1].reason
+    assert d.request_errors[1].retryable is False
+    assert d.request_errors[1].slot == 1
     assert d.request_errors[0] is None and d.request_errors[2] is None
 
 

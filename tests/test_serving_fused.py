@@ -15,7 +15,8 @@ from repro.models import attention as attn
 from repro.models import transformer as tf
 from repro.models.layers import Ctx
 from repro.models.model import build
-from repro.serving.engine import Engine, LoopEngine, Request, _pow2_bucket
+from repro.serving.engine import (Engine, LoopEngine, Request, RequestError,
+                                  _pow2_bucket)
 
 
 def _tiny_dense_cfg(**over):
@@ -376,8 +377,10 @@ def test_prefill_exception_fails_one_request_not_batch(dense_setup):
     out = eng.generate(_ragged_requests(cfg, lens, np.random.default_rng(4)))
     ref = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=0).generate(
         _ragged_requests(cfg, lens, np.random.default_rng(4)))
-    assert out[1] is None
-    assert "injected prefill fault" in eng.request_errors[1]
+    assert isinstance(out[1], RequestError)
+    assert "injected prefill fault" in eng.request_errors[1].reason
+    assert eng.request_errors[1].phase == "prefill"
+    assert eng.request_errors[1].slot == 1
     for i in (0, 2, 3):
         assert out[i] == ref[i], i
         assert eng.request_errors[i] is None
@@ -410,7 +413,163 @@ def test_midprompt_chunk_abort_recycles_slot_cleanly(dense_setup):
     ref = Engine(cfg, params, max_slots=2, max_len=64, chunk_size=4,
                  fused_step=False).generate(
         _ragged_requests(cfg, lens, np.random.default_rng(5)))
-    assert out[1] is None
-    assert "injected chunk fault" in eng.request_errors[1]
+    assert isinstance(out[1], RequestError)
+    assert "injected chunk fault" in eng.request_errors[1].reason
+    assert eng.request_errors[1].phase == "prefill"
     assert out[0] == ref[0]
     assert out[2] == ref[2]  # rode the recycled (dirty) slot 1
+
+
+def test_decode_exception_isolated_to_victim_slot(dense_setup):
+    """A persistent per-slot decode exception kills only the victim: the
+    batch decode raises, the engine re-probes each active slot solo against
+    the same compiled program with the same step key, the faulty slot
+    becomes a retryable RequestError(phase='decode'), and every survivor's
+    token stream matches a fresh engine bit for bit."""
+    cfg, params = dense_setup
+    lens = [6, 9, 5]
+    eng = Engine(cfg, params, max_slots=3, max_len=64, chunk_size=0,
+                 fused_step=False)
+    real = eng._decode
+
+    def flaky(params_, caches, last_tok, active, temps, key, rkeys,
+              tok_idx, lvls, pin=None, frow=None):
+        # persistent per-slot fault: raises whenever slot 1 is live, so
+        # the solo isolation probe reproduces it (a transient fault that
+        # passes its probe is *supposed* to survive)
+        if bool(np.asarray(active)[1]):
+            raise RuntimeError("injected decode fault")
+        return real(params_, caches, last_tok, active, temps, key, rkeys,
+                    tok_idx, lvls, pin=pin, frow=frow)
+
+    eng._decode = flaky
+    out = eng.generate(_ragged_requests(cfg, lens, np.random.default_rng(6)))
+    ref = Engine(cfg, params, max_slots=3, max_len=64, chunk_size=0,
+                 fused_step=False).generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(6)))
+    err = out[1]
+    assert isinstance(err, RequestError)
+    assert err.phase == "decode"
+    assert err.retryable is True
+    assert err.slot == 1
+    assert "injected decode fault" in err.reason
+    assert out[0] == ref[0]
+    assert out[2] == ref[2]
+
+
+# --------------------------------- incremental session API + cancellation
+
+
+def test_incremental_session_matches_generate(dense_setup):
+    """begin/submit/step/drain must be bit-identical to generate(): both
+    consume the same PRNG streams and the same scheduler order."""
+    cfg, params = dense_setup
+    lens = [3, 11, 6, 9]
+    eng = Engine(cfg, params, max_slots=2, max_len=64)
+    ref = eng.generate(_ragged_requests(cfg, lens, np.random.default_rng(7)))
+    reqs = _ragged_requests(cfg, lens, np.random.default_rng(7))
+    eng.begin()
+    for r in reqs:
+        eng.submit(r)
+    while eng.has_work():
+        eng.step()
+    eng.drain_pending()
+    assert [r.out_tokens for r in reqs] == ref
+    assert all(eng.status_of(r) == "completed" for r in reqs)
+
+
+def test_cancel_mid_chunked_prefill_token_clean_recycle(dense_setup):
+    """Cancel a request while its chunked prefill is mid-prompt (cache
+    already dirtied by earlier chunks): the slot's next occupant must
+    generate token-for-token what a fresh engine produces — the PR 6
+    admission reset does the cleanup, cancellation itself is free."""
+    cfg, params = dense_setup
+    lens = [14, 13, 6]
+    mk = lambda: Engine(cfg, params, max_slots=2, max_len=64, chunk_size=4,
+                        fused_step=False)
+    ref_eng = mk()
+    ref = ref_eng.generate(_ragged_requests(cfg, [14, 6], np.random.default_rng(8)))
+
+    eng = mk()
+    rng = np.random.default_rng(8)
+    r0 = Request(prompt=rng.integers(0, cfg.vocab_size, 14, dtype=np.int32),
+                 max_new_tokens=3)
+    victim = Request(prompt=np.arange(13, dtype=np.int32) % cfg.vocab_size,
+                     max_new_tokens=3)
+    r2 = Request(prompt=rng.integers(0, cfg.vocab_size, 6, dtype=np.int32),
+                 max_new_tokens=3 + (1 % 4))
+    eng.begin()
+    for r in (r0, victim, r2):
+        eng.submit(r)
+    eng.step()  # both slots admitted, one 4-token chunk written each
+    s = next(i for i, o in enumerate(eng._slots) if o is victim)
+    assert eng._offsets[s] > 0 and not eng._decoding[s], \
+        "victim must be mid-prompt for the test to bite"
+    assert eng.cancel(victim)
+    assert eng.status_of(victim) == "cancelled"
+    while eng.has_work():
+        eng.step()
+    eng.drain_pending()
+    assert victim.out_tokens == []          # never reached decode
+    assert r0.out_tokens == ref[0]
+    assert r2.out_tokens == ref[1]          # rode the recycled dirty slot
+    assert eng.cancel(victim) is False      # terminal: cancel is idempotent
+
+
+def test_cancel_mid_decode_keeps_partial_stream(dense_setup):
+    """Cancel a decoding request between steps: tokens already emitted
+    stay (a prefix of the uncancelled stream), the recycled slot's next
+    occupant is token-clean, and the outcome vocabulary distinguishes
+    client cancellation from deadline expiry."""
+    cfg, params = dense_setup
+    lens = [6, 9, 5]
+    full = Engine(cfg, params, max_slots=2, max_len=64).generate(
+        _ragged_requests(cfg, lens, np.random.default_rng(9)))
+
+    eng = Engine(cfg, params, max_slots=2, max_len=64)
+    reqs = _ragged_requests(cfg, lens, np.random.default_rng(9))
+    eng.begin()
+    for r in reqs:
+        eng.submit(r)
+    victim = reqs[1]
+    while True:
+        eng.step()
+        eng.drain_pending()
+        if eng.status_of(victim) != "running":
+            pytest.fail("victim finished before emitting a partial stream")
+        if len(victim.out_tokens) >= 2:
+            break
+    assert eng.cancel(victim, outcome="deadline_expired")
+    assert eng.status_of(victim) == "deadline_expired"
+    while eng.has_work():
+        eng.step()
+    eng.drain_pending()
+    got = victim.out_tokens
+    assert 2 <= len(got) < len(full[1])
+    assert got == full[1][:len(got)]        # partial stream is a prefix
+    assert reqs[0].out_tokens == full[0]
+    assert reqs[2].out_tokens == full[2]    # recycled slot token-clean
+
+
+def test_engine_deadline_expiry_queued_and_running(dense_setup):
+    """step(now) expires deadlines on the caller's clock: a queued request
+    dies without ever touching a slot; a running one dies mid-decode with
+    its partial tokens intact; unexpired requests are untouched."""
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, max_slots=1, max_len=64)
+    rng = np.random.default_rng(10)
+    a = Request(prompt=rng.integers(0, cfg.vocab_size, 5, dtype=np.int32),
+                max_new_tokens=8, deadline=50.0)
+    b = Request(prompt=rng.integers(0, cfg.vocab_size, 5, dtype=np.int32),
+                max_new_tokens=8, deadline=2.0)   # expires while queued
+    eng.begin()
+    eng.submit(a)
+    eng.submit(b)
+    eng.step(now=1.0)                       # a admitted (1 slot), b queued
+    assert eng.status_of(b) == "queued"
+    eng.step(now=3.0)                       # b's deadline passed
+    assert eng.status_of(b) == "deadline_expired"
+    assert b.out_tokens == []
+    eng.step(now=60.0)                      # now a expires mid-decode
+    assert eng.status_of(a) == "deadline_expired"
+    assert not eng.has_work()
