@@ -10,6 +10,7 @@ machine.
   python -m benchmarks.check_floors prefill     # §13 chunked prefill
   python -m benchmarks.check_floors megakernel  # §15 fused decode step
   python -m benchmarks.check_floors overload    # §16 front-end soak
+  python -m benchmarks.check_floors drift       # §17 drift + calibration
 """
 
 from __future__ import annotations
@@ -107,6 +108,15 @@ def check_faults() -> None:
     _floor("zero_fault_false_trip_rate",
            run["zero_fault_false_trip_rate"], "<=", 0.01)
     _floor("detection_recall", run["detection_recall"], ">=", 0.9)
+    # bitcell-only sweep: the dense end is gated, the dilute rates are
+    # recorded ungated with the physical reason carried in the record
+    gate = run.get("cell_only_gate")
+    if gate is not None:
+        sweep = run["cell_only_detection_by_rate"]
+        print(f"cell-only sweep: {sweep} "
+              f"(ungated rates {gate['ungated_rates']}: {gate['reason']})")
+        _floor(f"cell_only_recall@{gate['dense_rate']}",
+               sweep[gate["dense_rate"]], ">=", gate["dense_min_recall"])
     _floor("guarded_drop_pt", run["guarded_drop_pt"], "<=", 1.0)
     _floor("victim_token_match_vs_digital",
            run["victim_token_match_vs_digital"], ">=", 1.0)
@@ -213,9 +223,38 @@ def check_overload() -> None:
     _floor("degraded_admissions", run["degraded_admissions"], ">=", 1)
 
 
+def check_drift() -> None:
+    """§17 drift soak: the injected trajectory must actually hurt (an
+    uncalibrated ViT twin drops >= 5 pt — a cosmetic drift proves nothing),
+    online calibration must recover it (within 1 pt of drift-free on the
+    SAME trajectory, and the SQNR soak back within a couple dB of the
+    drift-free plane), the canary watchdog must flag the injected abrupt
+    supply step inside its analytic detection bound, and an all-zero
+    DriftSpec engine must stay bit-identical to a drift-free engine."""
+    run = last_with("BENCH_drift.json", "vit_drop_uncal_pt")
+    print(f"vit acc: free {run['vit_acc_driftfree']:.3f} / uncal "
+          f"{run['vit_acc_uncalibrated']:.3f} / cal "
+          f"{run['vit_acc_calibrated']:.3f} (step {run['vit_soak_step']}, "
+          f"calib quality {run['vit_calib_quality']:.2f})")
+    print(f"sqnr: free {run['sqnr_free_db']:.1f} dB, worst uncal gap "
+          f"{run['sqnr_uncal_gap_db']:.1f} dB, worst cal gap "
+          f"{run['sqnr_cal_gap_db']:.1f} dB")
+    print(f"watchdog: event step {run['watchdog_event_step']}, trip step "
+          f"{run['watchdog_trip_step']} (bound "
+          f"{run['watchdog_latency_bound']})")
+    _floor("vit_drop_uncal_pt", run["vit_drop_uncal_pt"], ">=", 5.0)
+    _floor("vit_drop_cal_pt", run["vit_drop_cal_pt"], "<=", 1.0)
+    _floor("sqnr_uncal_gap_db", run["sqnr_uncal_gap_db"], ">=", 10.0)
+    _floor("sqnr_cal_gap_db", run["sqnr_cal_gap_db"], "<=", 3.0)
+    _floor("watchdog_latency_steps", run["watchdog_latency_steps"],
+           "<=", run["watchdog_latency_bound"])
+    _floor("zero_drift_token_match", run["zero_drift_token_match"],
+           ">=", 1.0)
+
+
 CHECKS = {"deploy": check_deploy, "prefill": check_prefill,
           "faults": check_faults, "megakernel": check_megakernel,
-          "overload": check_overload}
+          "overload": check_overload, "drift": check_drift}
 
 
 def main(argv) -> None:

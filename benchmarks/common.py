@@ -114,7 +114,8 @@ def trained_tiny_vit(steps: int = 200) -> Tuple[object, dict]:
 
 
 def vit_eval_acc(cfg, params, mode: str, policy: str = None,
-                 noise_scale: float = 1.0, batches: int = 4) -> float:
+                 noise_scale: float = 1.0, batches: int = 4,
+                 drift=None, drift_state=None) -> float:
     from repro.core.sac import get_policy
     from repro.data.pipeline import DataConfig, image_batch
     from repro.models.layers import Ctx
@@ -125,6 +126,9 @@ def vit_eval_acc(cfg, params, mode: str, policy: str = None,
     for s in range(batches):
         x, y = image_batch(dcfg, 2000 + s, split="eval")
         ctx = Ctx.make(cfg, jax.random.fold_in(jax.random.PRNGKey(9), s), mode=mode)
+        if drift is not None:
+            ctx.drift = drift
+            ctx.drift_state = drift_state
         if policy is not None:
             ctx.policy = get_policy(policy)
         if ctx.policy is not None and noise_scale != 1.0:

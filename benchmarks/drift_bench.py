@@ -1,0 +1,244 @@
+"""Drift soak (DESIGN.md §17): temporal drift collapse vs online recovery.
+
+Four parts, recorded into BENCH_drift.json and gated by
+``check_floors.py drift``:
+
+  A. SQNR soak: one deployed CIM plane sampled along a drift trajectory
+     (gain/offset random walks + temperature excursion + a supply step).
+     The *uncalibrated* macro's SQNR vs the exact digital product collapses
+     as the trajectory walks off; the *calibrated* twin — probe regression
+     at each sample step, same trajectory, same readout noise draws modulo
+     the probe keys — must recover to within a couple dB of the drift-free
+     operating point.
+  B. ViT twin soak: CIFAR-head accuracy at a late-trajectory step (past a
+     supply event), {drift-free, uncalibrated, calibrated} on the SAME
+     drift realisation. Uncalibrated must degrade >= 5 pt (the soak is
+     meaningless if the injected drift is cosmetic); calibrated must hold
+     within 1 pt of drift-free. Trims come from the real
+     ``DriftController`` ticked to completion, and transfer to every ViT
+     layer because drift is keyed by global column index with offsets in
+     z-units.
+  C. watchdog latency: tick the controller through an abrupt supply step
+     and measure canary-trip latency in ticks — one controller tick per
+     fused decode step is exactly the serving integration, minus the
+     decode compute that would only slow the bench down. Gated against the
+     analytic ``detection_bound`` (canary cadence + a boosted
+     recalibration in flight + tick ordering).
+  D. zero-drift serving identity: a fused engine carrying an all-zero
+     ``DriftSpec`` must emit bit-identical tokens to a drift-free engine —
+     the exact-skip contract that makes the drift path safe to leave
+     compiled into production binaries.
+
+The soak is bench-only (not a tier-1 test): parts A+B re-run a ViT eval
+three times and live comfortably inside a bench budget but not a test one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_run, trained_tiny_vit, vit_eval_acc
+
+# the bench trajectory: all three drift channels on, strong enough that an
+# uncalibrated macro visibly fails (ViT part gates >= 5 pt of damage)
+SOAK_SEED = 7
+SOAK_SUPPLY_EVERY = 1024
+SOAK_STEP = 1536               # ViT sample step: inside supply epoch 1
+
+
+def _soak_drift():
+    from repro.core.drift import DriftSpec
+    return DriftSpec(seed=SOAK_SEED,
+                     walk_gain_std=0.15, walk_offset_std=2.0,
+                     temp_gain_amp=0.05, temp_period=2048,
+                     supply_gain_mag=0.15, supply_offset_mag=12.0,
+                     supply_every=SOAK_SUPPLY_EVERY)
+
+
+def _fit_trims(spec, drift, n_cols: int, step: int, probe_rows: int = 128):
+    """Run one full DriftController calibration pinned at ``step``.
+
+    The controller is the real serving component (probe plane, chunked
+    ticks, least-squares install); pinning the step just freezes the
+    trajectory the way a static-drift unit test would.
+    """
+    from repro.core.calibrate import CalibPolicy, DriftController
+
+    pol = CalibPolicy(probe_rows=probe_rows, probe_chunk=64, probe_k=256,
+                      every_steps=10 ** 9, canary_every=0)
+    ctl = DriftController(spec, drift, pol, n_cols, use_kernel=False)
+    for _ in range(pol.chunks_for(False) + 1):
+        ctl.tick(step)
+        if ctl.calibrations:
+            break
+    assert ctl.calibrations == 1
+    return ctl
+
+
+# ------------------------------------------------------------------ Part A
+
+
+def sqnr_soak(k: int = 256, n: int = 128, m: int = 64) -> dict:
+    from repro.core import quant
+    from repro.core.cim import CIMSpec, output_noise_std_int
+    from repro.kernels import ops as kops
+
+    spec = CIMSpec()           # 6b/6b CB — the paper's MLP operating point
+    drift = _soak_drift()
+    dspec = dataclasses.replace(spec, drift=drift)
+    kw, kx, kr = jax.random.split(jax.random.PRNGKey(3), 3)
+    qw = quant.qmax(spec.w_bits)
+    wq = jax.random.randint(kw, (k, n), -qw, qw + 1, jnp.int32).astype(
+        jnp.int8)
+    ws = jnp.float32(1.0 / qw)
+    x = jax.random.normal(kx, (m, k))
+    xs = quant.abs_max_scale(x.astype(jnp.float32), spec.in_bits)
+    xq = quant.quantize(x.astype(jnp.float32), xs, spec.in_bits)
+    digital = np.asarray(jnp.einsum(
+        "mk,kn->mn", xq.astype(jnp.float32), wq.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST) * (xs * ws))
+
+    def sqnr(y) -> float:
+        err = np.asarray(y, np.float64) - digital
+        return float(10.0 * np.log10(
+            np.sum(digital ** 2) / max(np.sum(err ** 2), 1e-30)))
+
+    def read(sp, dstate, seed):
+        return kops.cim_matmul_deployed(x, wq, ws, sp,
+                                        jax.random.PRNGKey(seed),
+                                        x_scale=xs, dstate=dstate)
+
+    free_db = sqnr(read(spec, None, 100))
+    curve = []
+    for step in (0, 512, 1024, SOAK_STEP, 2048, 4096):
+        uncal = sqnr(read(dspec, (jnp.int32(step), None, None), 200 + step))
+        ctl = _fit_trims(spec, drift, n, step)
+        cal = sqnr(read(dspec, ctl.trimmed_state(step), 300 + step))
+        curve.append({"step": step, "sqnr_uncal_db": uncal,
+                      "sqnr_cal_db": cal,
+                      "calib_quality": ctl.last_quality})
+    last = curve[-1]
+    return {
+        "sqnr_free_db": free_db,
+        "sqnr_soak": curve,
+        "sqnr_uncal_gap_db": free_db - min(c["sqnr_uncal_db"] for c in curve),
+        "sqnr_cal_gap_db": free_db - min(c["sqnr_cal_db"] for c in curve),
+        "sqnr_final_recovery_db": last["sqnr_cal_db"] - last["sqnr_uncal_db"],
+    }
+
+
+# ------------------------------------------------------------------ Part B
+
+
+def vit_drift_soak(batches: int = 3) -> dict:
+    from repro.core.sac import get_policy
+
+    cfg, params = trained_tiny_vit()
+    drift = _soak_drift()
+    # widest plane any CIM-routed layer can produce: trims cover it all
+    n_cols = max(int(leaf.shape[-1])
+                 for leaf in jax.tree_util.tree_leaves(params)
+                 if hasattr(leaf, "shape") and len(leaf.shape) == 2)
+    pol = get_policy("paper_sac")
+    probe_spec = pol.mlp if pol.mlp is not None else pol.attn
+
+    acc_free = vit_eval_acc(cfg, params, "sim", batches=batches)
+    raw = (jnp.int32(SOAK_STEP), None, None)
+    acc_uncal = vit_eval_acc(cfg, params, "sim", batches=batches,
+                             drift=drift, drift_state=raw)
+    ctl = _fit_trims(probe_spec, drift, n_cols, SOAK_STEP)
+    acc_cal = vit_eval_acc(cfg, params, "sim", batches=batches,
+                           drift=drift,
+                           drift_state=ctl.trimmed_state(SOAK_STEP))
+    return {
+        "vit_acc_driftfree": acc_free,
+        "vit_acc_uncalibrated": acc_uncal,
+        "vit_acc_calibrated": acc_cal,
+        "vit_drop_uncal_pt": (acc_free - acc_uncal) * 100,
+        "vit_drop_cal_pt": (acc_free - acc_cal) * 100,
+        "vit_calib_quality": ctl.last_quality,
+        "vit_soak_step": SOAK_STEP,
+    }
+
+
+# ------------------------------------------------------------------ Part C
+
+
+def watchdog_latency(event_step: int = 40) -> dict:
+    from repro.core.calibrate import (CalibPolicy, DriftController,
+                                      detection_bound)
+    from repro.core.cim import CIMSpec
+    from repro.core.drift import DriftSpec
+
+    drift = DriftSpec(seed=SOAK_SEED, supply_offset_mag=20.0,
+                      supply_every=event_step)
+    pol = CalibPolicy(probe_rows=32, probe_chunk=16, probe_k=128,
+                      every_steps=10 ** 6, canary_every=4)
+    ctl = DriftController(CIMSpec(), drift, pol, n_cols=128,
+                          use_kernel=False)
+    trip_step = None
+    for step in range(event_step + detection_bound(pol) + 4):
+        for e in ctl.tick(step):
+            if e["kind"] == "watchdog_trip" and step >= event_step \
+                    and trip_step is None:
+                trip_step = step
+    assert trip_step is not None, "watchdog never saw the supply step"
+    return {
+        "watchdog_event_step": event_step,
+        "watchdog_trip_step": trip_step,
+        "watchdog_latency_steps": trip_step - event_step,
+        "watchdog_latency_bound": detection_bound(pol),
+        "watchdog_recalibrations": ctl.calibrations,
+    }
+
+
+# ------------------------------------------------------------------ Part D
+
+
+def zero_drift_identity() -> dict:
+    from repro.configs.registry import get_config
+    from repro.core.drift import DriftSpec
+    from repro.models.model import build
+    from repro.serving.engine import Engine, Request
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=256,
+                              vocab_size=128, n_heads=4, n_kv_heads=2,
+                              head_dim=32)
+    params, _ = build(cfg).init(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(1).integers(1, 127, size=9).astype(
+        np.int32)
+
+    def toks(**kw):
+        eng = Engine(cfg, params, max_slots=2, max_len=64, cim_mode="sim",
+                     seed=0, deploy=True, **kw)
+        return [list(t) for t in
+                eng.generate([Request(prompt=prompt, max_new_tokens=8)])]
+
+    base = toks()
+    zero = toks(drift=DriftSpec(seed=SOAK_SEED))     # all rates zero
+    flat = [t for ts in base for t in ts]
+    match = (sum(a == b for a, b in zip(flat,
+                                        [t for ts in zero for t in ts]))
+             / max(len(flat), 1))
+    return {"zero_drift_token_match": match,
+            "zero_drift_tokens": len(flat)}
+
+
+def run() -> dict:
+    out = {}
+    out.update(sqnr_soak())
+    out.update(vit_drift_soak())
+    out.update(watchdog_latency())
+    out.update(zero_drift_identity())
+    append_run("BENCH_drift.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

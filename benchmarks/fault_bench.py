@@ -95,7 +95,12 @@ def detection_trials(trials: int = 20, m: int = 32, k: int = 256,
         false_positions += int(one_trial(t, None).sum())
     false_rate = false_positions / (trials * m)
 
-    # bitcell-only sweep (recorded, not gated — see module docstring)
+    # bitcell-only sweep. Dilute rates stay explicitly ungated — random-
+    # signed bitcell flips partially cancel in the checksum column (error
+    # grows ~ sqrt(flips) against a fixed 6-sigma threshold), so per-row
+    # recall for sparse flips is *physically* poor, not a guard bug. The
+    # dense end of the sweep (rate 0.2) IS gateable: enough flips accumulate
+    # a systematic per-column error, and a guard that misses it is broken.
     cell_sweep = {}
     for rate in (1e-3, 1e-2, 0.05, 0.2):
         det = sum(
@@ -108,6 +113,16 @@ def detection_trials(trials: int = 20, m: int = 32, k: int = 256,
         "detection_recall": recall,
         "zero_fault_false_trip_rate": false_rate,
         "cell_only_detection_by_rate": cell_sweep,
+        "cell_only_gate": {
+            "dense_rate": "0.2",
+            "dense_min_recall": 0.9,
+            "ungated_rates": ["0.001", "0.01", "0.05"],
+            "ungated": True,
+            "reason": "random-signed bitcell flips partially cancel in the "
+                      "checksum column (error ~ sqrt(flips) vs the fixed "
+                      "6-sigma noise threshold); dilute-rate recall is "
+                      "recorded for trend only",
+        },
         "detection_trials": trials,
     }
 

@@ -24,10 +24,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (attention_bench, cim_dense_bench, fault_bench,
-                            fig2_swing, fig4_sac, fig5_column, fig6_summary,
-                            kernel_bench, prefill_bench, roofline_report,
-                            serving_bench, vit_accuracy)
+    from benchmarks import (attention_bench, cim_dense_bench, drift_bench,
+                            fault_bench, fig2_swing, fig4_sac, fig5_column,
+                            fig6_summary, kernel_bench, prefill_bench,
+                            roofline_report, serving_bench, vit_accuracy)
 
     benches = {
         "fig5_column": fig5_column.run,
@@ -41,6 +41,7 @@ def main() -> None:
         "attention_bench": attention_bench.run,
         "prefill_bench": prefill_bench.run,
         "fault_bench": fault_bench.run,
+        "drift_bench": drift_bench.run,
         "roofline_report": roofline_report.run,
         "perf_gains": roofline_report.perf_gains,
     }

@@ -1,0 +1,307 @@
+"""Online background calibration + canary watchdog for the drifting macro.
+
+DESIGN.md §17. The macro's temporal drift (core/drift.py) is per-column
+affine: ``y = gain_c * y_true + sigma * offset_c``. That makes it exactly
+recoverable from probes: run ``M`` known test vectors through the analog
+path, regress each column's analog output on the exact digital oracle, and
+install the fitted ``(gain, offset)`` as dequant trims — ``apply_drift``
+inverts them right after injecting the drift, so a perfect fit cancels the
+drift up to readout noise. Because drift (and its trims) are keyed by the
+*global column index* — one physical macro time-shared by every layer — a
+single ``(n_cols,)`` trim pair calibrated on a synthetic probe plane
+transfers to all layers, and offsets ride in z-units (multiples of the
+analytic readout sigma) so the same numbers are valid at every layer's
+dequant scale.
+
+Three cost tiers, scheduled by ``DriftController.tick`` — **at most one
+probe launch per serving step**, so calibration interleaves with decode
+the way chunked prefill does (bounded per-step latency, no decode stall):
+
+  * **canary** (every ``canary_every`` steps): one fixed row with a known
+    golden digital output, corrected by the current trims. Two tests, both
+    in noise-calibrated units: per-column max |residual| (catches walked-
+    off columns) and common-mode mean residual (catches supply steps,
+    which are global and would otherwise hide under the per-column noise
+    floor at small magnitudes).
+  * **full calibration** (every ``every_steps`` steps, or on a canary
+    trip): ``probe_rows`` rows streamed in ``probe_chunk``-row chunks, one
+    chunk per tick; on the last chunk the per-column regression runs and
+    new trims install atomically, with a quality score = mean residual
+    variance over sigma^2 (healthy fit ~ 1).
+  * **escalation ladder**: canary trip -> recalibrate; low-quality fit ->
+    *boosted* recalibration (``boost`` x rows — the calibration analog of
+    the guard's vote-boost rung); ``max_recals`` consecutive low-quality
+    fits -> escalate to the serving engine, which pins every (slot, layer)
+    to the digital path via the PR 6 guard machinery (or flags itself
+    degraded when no guard is armed).
+
+PRNG discipline: probe/canary readout keys advance a dedicated chain off
+``CalibPolicy.seed`` — never the engine's key — so enabling calibration
+leaves every token's noise realisation bit-identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.cim import CIMSpec, output_noise_std_int
+from repro.core.drift import DriftSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibPolicy:
+    """Calibration/watchdog schedule and thresholds."""
+
+    seed: int = 0
+    probe_rows: int = 64      # rows per full calibration (rounded up to a
+    probe_chunk: int = 16     # whole number of fixed-shape chunks; one
+                              # chunk runs per serving step)
+    probe_k: int = 256        # contraction dim of the synthetic probe plane
+    every_steps: int = 256    # periodic full-calibration cadence (>=1;
+                              # the first calibration starts at step 0)
+    canary_every: int = 8     # canary watchdog cadence (0 disables)
+    canary_sigmas: float = 6.0  # trip threshold, in noise sigmas
+    quality_max: float = 4.0  # residual_var/sigma^2 above this = bad fit
+    max_recals: int = 2       # consecutive bad fits before escalating
+    boost: int = 4            # probe-row multiplier for boosted recals
+
+    def __post_init__(self):
+        if self.probe_rows <= 0 or self.probe_chunk <= 0 or self.probe_k <= 0:
+            raise ValueError("probe dimensions must be positive")
+        if self.every_steps <= 0:
+            raise ValueError("every_steps must be >= 1")
+
+    def chunks_for(self, boost: bool) -> int:
+        rows = self.probe_rows * (self.boost if boost else 1)
+        return -(-rows // self.probe_chunk)
+
+
+def detection_bound(policy: CalibPolicy) -> int:
+    """Worst-case steps from an abrupt drift event to a watchdog trip.
+
+    The canary next fires within ``canary_every`` steps unless a full
+    calibration is mid-flight, which holds the tick for up to a boosted
+    calibration's chunk count; +1 for the tick ordering. The drift bench
+    gates its measured latency against this bound.
+    """
+    return policy.canary_every + policy.chunks_for(True) + 1
+
+
+def max_plane_width(params) -> int:
+    """Widest deployed int8 weight plane in a params tree — the number of
+    physical macro columns the drift realisation (and hence the trim
+    vectors) must cover."""
+    widest = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        # deployed planes are (K, N) standalone or (L, K, N) layer-stacked
+        if not hasattr(leaf, "shape") or len(leaf.shape) < 2:
+            continue
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if isinstance(name, str) and name.startswith("wq"):
+            widest = max(widest, int(leaf.shape[-1]))
+    return widest
+
+
+def estimate_trims(y: jnp.ndarray, d: jnp.ndarray, sigma: float,
+                   gain_floor: float = 0.05
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, float]:
+    """Per-column least squares of analog probes on the digital oracle.
+
+    ``y``: (M, N) analog outputs; ``d``: (M, N) exact digital outputs;
+    ``sigma``: analytic readout std in the same units. Fits
+    ``y ~ gain * d + sigma * off_z`` per column and returns
+    ``(gain (N,), off_z (N,), quality)`` where quality is the mean
+    residual variance over sigma^2 (~1 for a healthy affine fit; the
+    estimator noise floors are ~sigma/(std(d)*sqrt(M)) on gain and
+    ~1/sqrt(M) z on offset). ``gain_floor`` keeps the trim inverse
+    bounded if a column's gain collapses.
+    """
+    yf = jnp.asarray(y, jnp.float32)
+    df = jnp.asarray(d, jnp.float32)
+    dm = df.mean(axis=0)
+    ym = yf.mean(axis=0)
+    dc = df - dm
+    var = jnp.sum(dc * dc, axis=0)
+    cov = jnp.sum(dc * (yf - ym), axis=0)
+    gain = cov / jnp.maximum(var, 1e-12)
+    gain = jnp.maximum(gain, gain_floor)
+    s = max(float(sigma), 1e-12)
+    off_z = (ym - gain * dm) / s
+    resid = yf - gain * df - (s * off_z)
+    quality = float(jnp.mean(resid * resid) / (s * s))
+    return gain, off_z, quality
+
+
+class DriftController:
+    """Host-side calibration scheduler + canary watchdog + escalation.
+
+    Owns the synthetic probe plane, the current trim vectors, and the
+    watchdog state machine. ``tick(step)`` runs **at most one** bounded
+    device launch and returns a list of event dicts (kind: "calibrate" |
+    "watchdog_trip" | "escalate") for the serving metrics log. The engine
+    reads ``trim_gain``/``trim_off`` into the per-call drift state and
+    reacts to the "escalate" event (digital pin / degraded flag).
+    """
+
+    def __init__(self, spec: CIMSpec, drift: DriftSpec, policy: CalibPolicy,
+                 n_cols: int, use_kernel: bool = True):
+        if n_cols <= 0:
+            raise ValueError("n_cols must be positive (no deployed planes?)")
+        self.policy = policy
+        self.n_cols = n_cols
+        # probes measure the *temporal* drift channel only: the static
+        # fault realisation lives on the real planes (and is the guard's
+        # domain), not on this synthetic plane
+        self.spec = dataclasses.replace(spec, fault=None, drift=drift)
+        self._use_kernel = use_kernel
+
+        p = policy
+        base = jax.random.PRNGKey(p.seed)
+        kx, kw, kc = jax.random.split(base, 3)
+        qw = quant.qmax(self.spec.w_bits)
+        k = p.probe_k
+        self._wq = jax.random.randint(kw, (k, n_cols), -qw, qw + 1,
+                                      jnp.int32).astype(jnp.int8)
+        self._ws = jnp.float32(1.0 / qw)
+        rows_max = p.probe_chunk * p.chunks_for(True)
+        x = jax.random.normal(kx, (rows_max, k), jnp.float32)
+        self._xs = quant.abs_max_scale(x, self.spec.in_bits)
+        self._x = x
+        xq = quant.quantize(x, self._xs, self.spec.in_bits)
+        unit = self._xs * self._ws
+        self._digital = np.asarray(
+            jnp.einsum("mk,kn->mn", xq.astype(jnp.float32),
+                       self._wq.astype(jnp.float32),
+                       precision=jax.lax.Precision.HIGHEST) * unit)
+        self.sigma_deq = float(output_noise_std_int(self.spec, k)
+                               * np.asarray(unit))
+        self._xc = x[:1]
+        self._golden = self._digital[:1]
+
+        from repro.kernels import ops as kops
+        from repro.core.cim import cim_dense
+
+        def probe(xrows, key, dstate):
+            if use_kernel:
+                return kops.cim_matmul_deployed(
+                    xrows, self._wq, self._ws, self.spec, key,
+                    x_scale=self._xs, dstate=dstate)
+            return cim_dense(xrows, None, self.spec, key, mode="sim",
+                             x_scale=self._xs, w_scale=self._ws,
+                             wq=self._wq, dstate=dstate)
+
+        self._probe = jax.jit(probe)
+
+        self.trim_gain = jnp.ones((n_cols,), jnp.float32)
+        self.trim_off = jnp.zeros((n_cols,), jnp.float32)
+        self.calibrations = 0
+        self.watchdog_trips = 0
+        self.last_quality: Optional[float] = None
+        self.escalated = False
+        self._calibrating = False
+        self._boosted = False
+        self._chunk_i = 0
+        self._chunks: List[np.ndarray] = []
+        self._last_cal_end: Optional[int] = None
+        self._bad_fits = 0
+        self._call = 0
+
+    # -- PRNG: a dedicated readout-key chain, never the engine's ----------
+    def _key(self):
+        self._call += 1
+        return jax.random.fold_in(
+            jax.random.PRNGKey(self.policy.seed ^ 0x0CA11B), self._call)
+
+    def _raw_state(self, step):
+        """Drift state without trims: probes measure the raw drift."""
+        return (jnp.asarray(step, jnp.int32), None, None)
+
+    def trimmed_state(self, step):
+        return (jnp.asarray(step, jnp.int32), self.trim_gain, self.trim_off)
+
+    # -- schedule ---------------------------------------------------------
+    def start_calibration(self, boost: bool = False) -> None:
+        self._calibrating = True
+        self._boosted = boost
+        self._chunk_i = 0
+        self._chunks = []
+
+    def tick(self, step: int) -> List[Dict[str, Any]]:
+        """One serving step: run at most one probe chunk or one canary."""
+        events: List[Dict[str, Any]] = []
+        p = self.policy
+        if self.escalated:
+            return events
+        if self._calibrating:
+            rows = p.probe_chunk
+            off = self._chunk_i * rows
+            y = self._probe(
+                jax.lax.dynamic_slice_in_dim(self._x, off, rows, 0),
+                self._key(), self._raw_state(step))
+            self._chunks.append(np.asarray(y))
+            self._chunk_i += 1
+            if self._chunk_i >= p.chunks_for(self._boosted):
+                self._finish_calibration(step, events)
+        elif (self._last_cal_end is None
+              or step - self._last_cal_end >= p.every_steps):
+            self.start_calibration()
+        elif p.canary_every > 0 and step % p.canary_every == 0:
+            tripped, dev = self._canary(step)
+            if tripped:
+                self.watchdog_trips += 1
+                events.append({"kind": "watchdog_trip", "step": step,
+                               "deviation_sigmas": dev})
+                # ladder rung 1/2: recalibrate, boosted if the last full
+                # calibration already came back low-quality
+                self.start_calibration(boost=self._bad_fits > 0)
+        return events
+
+    def _finish_calibration(self, step: int, events: list) -> None:
+        p = self.policy
+        y = np.concatenate(self._chunks, axis=0)
+        d = self._digital[: y.shape[0]]
+        gain, off_z, quality = estimate_trims(
+            jnp.asarray(y), jnp.asarray(d), self.sigma_deq)
+        self.trim_gain = gain
+        self.trim_off = off_z
+        self.calibrations += 1
+        self.last_quality = quality
+        self._calibrating = False
+        self._last_cal_end = step
+        ok = quality <= p.quality_max
+        events.append({"kind": "calibrate", "step": step,
+                       "quality": quality, "rows": int(y.shape[0]),
+                       "boosted": self._boosted, "ok": bool(ok)})
+        if ok:
+            self._bad_fits = 0
+            return
+        self._bad_fits += 1
+        if self._bad_fits > p.max_recals:
+            # ladder rung 3: the affine trim model cannot hold the macro in
+            # spec — hand off to the engine (digital pin via the guard)
+            self.escalated = True
+            events.append({
+                "kind": "escalate", "step": step,
+                "detail": (f"{self._bad_fits} consecutive calibrations "
+                           f"with quality > {p.quality_max:g}")})
+        else:
+            self.start_calibration(boost=True)
+
+    def _canary(self, step: int) -> Tuple[bool, float]:
+        """Trim-corrected canary read vs its golden digital output."""
+        p = self.policy
+        y = np.asarray(self._probe(self._xc, self._key(),
+                                   self.trimmed_state(step)))
+        r = y[0] - self._golden[0]
+        s = max(self.sigma_deq, 1e-12)
+        col_dev = float(np.max(np.abs(r)) / s)
+        cm_dev = float(abs(r.mean()) / (s / math.sqrt(r.shape[0])))
+        dev = max(col_dev, cm_dev)
+        return dev > p.canary_sigmas, dev

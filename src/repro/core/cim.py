@@ -49,6 +49,7 @@ from repro.core.adc import (
     adc_total_error_var_lsb2,
     sar_convert,
 )
+from repro.core.drift import DriftSpec, apply_drift
 from repro.core.faults import FaultSpec, apply_output_faults, column_gain, column_offset_z
 
 
@@ -77,6 +78,11 @@ class CIMSpec:
                                      # runtime faults (column gain/offset,
                                      # ADC stuck-code, vote brownouts) act
                                      # here in both sim fidelities.
+    drift: Optional["DriftSpec"] = None  # temporal drift model (DESIGN.md
+                                     # §17); None = stable macro. Evaluated
+                                     # at the step carried by the traced
+                                     # ``dstate`` argument — spec stays
+                                     # jit-static while time advances.
 
     # --- derived -----------------------------------------------------------
     @property
@@ -333,7 +339,8 @@ def vote_drop_extra_std_int(spec: CIMSpec, k: int,
 
 @partial(jax.jit, static_argnames=("spec",))
 def cim_matmul_behavioral(
-    xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec: CIMSpec
+    xq: jnp.ndarray, wq: jnp.ndarray, key: jax.Array, spec: CIMSpec,
+    dstate=None,
 ) -> jnp.ndarray:
     """Behavioural macro matmul: exact int dot + equivalent Gaussian error.
 
@@ -358,6 +365,11 @@ def cim_matmul_behavioral(
     sigma = output_noise_std_int(spec, k)
     if sigma > 0.0:
         y = y + sigma * jax.random.normal(key, y.shape, jnp.float32)
+    # temporal drift (DESIGN.md §17) acts on the analog transfer curve —
+    # before the static fault epilogue, so a stuck ADC column overrides
+    # whatever the drifted value was. Skipped entirely (bit-identical)
+    # when no drift spec / state is present.
+    y = apply_drift(y, spec.drift, sigma, dstate)
     f = spec.fault
     if f is not None and f.any_output_fault():
         # runtime structural faults, output-referred (DESIGN.md §14); the
@@ -384,6 +396,7 @@ def cim_dense(
     x_scale: Optional[jnp.ndarray] = None,
     w_scale: Optional[jnp.ndarray] = None,
     wq: Optional[jnp.ndarray] = None,
+    dstate=None,
 ) -> jnp.ndarray:
     """y = x @ w executed digitally, as QAT fake-quant, or on the CIM model.
 
@@ -425,7 +438,7 @@ def cim_dense(
             x_scale=x_scale, w_scale=w_scale, wq=wq)
         if key is None:
             key = jax.random.PRNGKey(0)
-        y = cim_matmul_behavioral(xq, wq_i, key, spec)
+        y = cim_matmul_behavioral(xq, wq_i, key, spec, dstate)
         return (y * xs * ws).astype(dtype)
 
     raise ValueError(f"unknown cim mode: {mode}")

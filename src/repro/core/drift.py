@@ -1,0 +1,244 @@
+"""Temporal drift of the analog macro — a deterministic function of time.
+
+The static ``FaultSpec`` path (faults.py, DESIGN §14) freezes one fault
+realisation at deploy time. Real charge-domain macros *move*: capacitor
+leakage and comparator aging random-walk the per-column transfer curve,
+die temperature excursions modulate it slowly and coherently, and supply
+rail steps (a neighbouring block powering up, a DVFS transition) shift it
+abruptly. This module injects all three as **pure functions of a monotonic
+step counter** — no state is carried between steps, so
+
+  * the same ``(seed, step)`` always gives the same drift, bit for bit,
+    across processes and batch shapes (counter-based Threefry, the same
+    discipline as the kernel noise / fault realisations),
+  * a run can be replayed or resumed from any step without history, and
+  * ``kernels/ref.py`` reproduces every component with an independent
+    bit-for-bit oracle.
+
+Model, per output column ``c`` at step ``t`` (all amplitudes in relative
+gain units for the gain term, and in z-units — multiples of the macro's
+analytic readout sigma — for the offset term, matching ``FaultSpec``):
+
+  * **random walk**: a truncated Karhunen-Loeve expansion of a Brownian
+    motion on ``[0, horizon]`` — ``B_c(t) = sum_j z_{c,j} *
+    sqrt(2*horizon)/((j+.5)*pi) * sin((j+.5)*pi*t/horizon)`` with
+    ``walk_terms`` independent N(0,1) coefficients per column. Unlike a
+    cumulative sum this is O(terms) to evaluate at *any* t (the epilogue
+    re-evaluates it every call under jit), yet it is a single consistent
+    trajectory: nearby steps give nearby values, and Var ~ t near the
+    origin like a true walk. It is a smooth low-frequency surrogate, not
+    an exact Wiener path — documented, and exactly oracled.
+  * **temperature**: one global sinusoid (period ``temp_period`` steps,
+    seeded phase) scaled by a per-column N(0,1) sensitivity — columns
+    drift coherently but not identically, like a die-level gradient.
+  * **supply steps**: a global piecewise-constant level that jumps to a
+    fresh N(0,1) draw every ``supply_every`` steps (epoch 0 is zero, so
+    short runs start clean). Abrupt and common-mode: exactly the event
+    class the canary watchdog's common-mode test is built to catch.
+
+``apply_drift`` composes ``y*gain + sigma*offset_z`` *before* the static
+fault epilogue (a stuck ADC column overrides whatever the drifted analog
+value was) and then applies the inverse of the current calibration trims
+``(y - sigma*trim_off)/trim_gain`` (core/calibrate.py estimates them).
+With ``drift=None``, an all-zero spec, or ``dstate=None`` the epilogue is
+skipped entirely — exact bit identity with the drift-free path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.prng import gaussian_from_bits, threefry2x32, uniform_from_bits
+
+# Domain separation vs DOMAIN_TILE_NOISE / DOMAIN_SAR / DOMAIN_FAULT: drift
+# draws must never collide with a kernel-noise or fault block under the same
+# user seed.
+DOMAIN_DRIFT = 0x7A3C95E1
+
+# Threefry key-word-1 tags, one per independent gaussian field. Counters are
+# (column, term) / (column, 0) / (epoch, 0) — global coordinates, so the
+# realisation is independent of batching, exactly like tile_gaussian.
+TAG_WALK_GAIN = 1
+TAG_WALK_OFFSET = 2
+TAG_TEMP_GAIN = 3
+TAG_TEMP_OFFSET = 4
+TAG_SUPPLY_GAIN = 5
+TAG_SUPPLY_OFFSET = 6
+TAG_TEMP_PHASE = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """Temporal drift model parameters. Frozen/hashable: rides on CIMSpec
+    as jit-static config, like FaultSpec."""
+
+    seed: int = 0
+    # random walk: per-column std of the gain / offset walk at t = horizon
+    # (the walk reaches ~N(0, t/horizon * std^2) at step t).
+    walk_gain_std: float = 0.0
+    walk_offset_std: float = 0.0
+    # temperature excursion: amplitude of the global sinusoid, scaled per
+    # column by an N(0,1) sensitivity.
+    temp_gain_amp: float = 0.0
+    temp_offset_amp: float = 0.0
+    temp_period: int = 4096
+    # supply steps: a fresh global N(0, mag^2) level every supply_every
+    # steps (0 disables; epoch 0 is always zero-level).
+    supply_gain_mag: float = 0.0
+    supply_offset_mag: float = 0.0
+    supply_every: int = 0
+    # walk shape: KL horizon (steps) and number of expansion terms.
+    horizon: int = 65536
+    walk_terms: int = 12
+
+    def __post_init__(self):
+        if self.temp_period <= 0:
+            raise ValueError("temp_period must be positive")
+        if self.horizon <= 0 or self.walk_terms <= 0:
+            raise ValueError("horizon and walk_terms must be positive")
+        if self.supply_every < 0:
+            raise ValueError("supply_every must be >= 0")
+
+    def _has_supply(self) -> bool:
+        return self.supply_every > 0 and (
+            self.supply_gain_mag > 0.0 or self.supply_offset_mag > 0.0
+        )
+
+    def has_gain(self) -> bool:
+        return (
+            self.walk_gain_std > 0.0
+            or self.temp_gain_amp > 0.0
+            or (self.supply_every > 0 and self.supply_gain_mag > 0.0)
+        )
+
+    def has_offset(self) -> bool:
+        return (
+            self.walk_offset_std > 0.0
+            or self.temp_offset_amp > 0.0
+            or (self.supply_every > 0 and self.supply_offset_mag > 0.0)
+        )
+
+    def active(self) -> bool:
+        """False iff every drift channel is zero — the exact-identity gate."""
+        return self.has_gain() or self.has_offset()
+
+
+# ``dstate``: (step, trim_gain, trim_off). step is a traced int32 scalar;
+# the trims are (Nmax,) f32 arrays (identity = ones/zeros) or both None
+# when no calibration runs. Threaded as a pytree argument through the
+# jitted closures so advancing time never retraces.
+DriftState = Tuple[jnp.ndarray, Optional[jnp.ndarray], Optional[jnp.ndarray]]
+
+
+def _draw(seed: int, tag: int, c0, c1) -> jnp.ndarray:
+    """One N(0,1) per (tag, c0, c1) counter under the drift domain key."""
+    b0, b1 = threefry2x32(
+        jnp.uint32(seed) ^ jnp.uint32(DOMAIN_DRIFT), jnp.uint32(tag),
+        jnp.asarray(c0, jnp.uint32), jnp.asarray(c1, jnp.uint32),
+    )
+    return gaussian_from_bits(b0, b1)
+
+
+def _kl_walk(spec: DriftSpec, tag: int, n: int, step) -> jnp.ndarray:
+    """Brownian surrogate B(t)/sqrt(horizon) per column: unit variance at
+    t = horizon. Python loop over the (static, small) term count keeps the
+    accumulation order fixed — the oracle must match it bit for bit."""
+    t = jnp.asarray(step, jnp.float32)
+    cols = jnp.arange(n, dtype=jnp.uint32)
+    acc = jnp.zeros((n,), jnp.float32)
+    horizon = float(spec.horizon)
+    for j in range(spec.walk_terms):
+        w = (j + 0.5) * math.pi
+        amp = math.sqrt(2.0) / w   # sqrt(2*horizon)/w, / sqrt(horizon)
+        z = _draw(spec.seed, tag, cols, jnp.uint32(j))
+        acc = acc + z * (amp * jnp.sin((w / horizon) * t))
+    return acc
+
+
+def _temp_wave(spec: DriftSpec, step) -> jnp.ndarray:
+    """Global temperature sinusoid with a seeded phase, in [-1, 1]."""
+    b0, _ = threefry2x32(
+        jnp.uint32(spec.seed) ^ jnp.uint32(DOMAIN_DRIFT),
+        jnp.uint32(TAG_TEMP_PHASE), jnp.uint32(0), jnp.uint32(0),
+    )
+    phase = (2.0 * math.pi) * uniform_from_bits(b0)
+    t = jnp.asarray(step, jnp.float32)
+    return jnp.sin((2.0 * math.pi / float(spec.temp_period)) * t + phase)
+
+
+def _supply_level(spec: DriftSpec, tag: int, step) -> jnp.ndarray:
+    """Global piecewise-constant N(0,1) level per supply epoch (0 at epoch
+    0). Scalar: supply steps are common-mode across columns."""
+    epoch = (jnp.asarray(step, jnp.int32) // jnp.int32(spec.supply_every)
+             ).astype(jnp.uint32)
+    z = _draw(spec.seed, tag, epoch, jnp.uint32(0))
+    return jnp.where(epoch > 0, z, jnp.float32(0.0))
+
+
+def drift_gain(spec: DriftSpec, n: int, step) -> Optional[jnp.ndarray]:
+    """(n,) multiplicative gain at ``step``, or None when no gain channel
+    is configured (static skip — the jitted epilogue stays untouched)."""
+    if not spec.has_gain():
+        return None
+    val = jnp.zeros((n,), jnp.float32)
+    if spec.walk_gain_std > 0.0:
+        val = val + spec.walk_gain_std * _kl_walk(spec, TAG_WALK_GAIN, n, step)
+    if spec.temp_gain_amp > 0.0:
+        cols = jnp.arange(n, dtype=jnp.uint32)
+        sens = _draw(spec.seed, TAG_TEMP_GAIN, cols, jnp.uint32(0))
+        val = val + spec.temp_gain_amp * sens * _temp_wave(spec, step)
+    if spec.supply_every > 0 and spec.supply_gain_mag > 0.0:
+        val = val + spec.supply_gain_mag * _supply_level(
+            spec, TAG_SUPPLY_GAIN, step)
+    return 1.0 + val
+
+
+def drift_offset_z(spec: DriftSpec, n: int, step) -> Optional[jnp.ndarray]:
+    """(n,) additive offset at ``step`` in z-units (multiples of the
+    analytic readout sigma), or None when no offset channel is configured.
+    z-units make the same realisation consistent across the behavioral
+    (integer) and deployed (dequantized) epilogues, and let one trim
+    vector transfer across layers with different scales."""
+    if not spec.has_offset():
+        return None
+    val = jnp.zeros((n,), jnp.float32)
+    if spec.walk_offset_std > 0.0:
+        val = val + spec.walk_offset_std * _kl_walk(
+            spec, TAG_WALK_OFFSET, n, step)
+    if spec.temp_offset_amp > 0.0:
+        cols = jnp.arange(n, dtype=jnp.uint32)
+        sens = _draw(spec.seed, TAG_TEMP_OFFSET, cols, jnp.uint32(0))
+        val = val + spec.temp_offset_amp * sens * _temp_wave(spec, step)
+    if spec.supply_every > 0 and spec.supply_offset_mag > 0.0:
+        val = val + spec.supply_offset_mag * _supply_level(
+            spec, TAG_SUPPLY_OFFSET, step)
+    return val
+
+
+def apply_drift(y: jnp.ndarray, spec: Optional[DriftSpec], sigma,
+                dstate: Optional[DriftState]) -> jnp.ndarray:
+    """Drift + trim-correction epilogue on a (..., n) output block.
+
+    Applies ``y*gain + sigma*offset_z`` for the drift realisation at
+    ``dstate[0]``, then the inverse of the installed calibration trims
+    ``(y - sigma*trim_off)/trim_gain``. ``sigma`` is the analytic readout
+    std in y's own units (integer for the behavioral path, dequantized for
+    the deployed epilogue). No-op (bit-identical) when drift is off.
+    """
+    if spec is None or dstate is None or not spec.active():
+        return y
+    step, trim_gain, trim_off = dstate
+    n = y.shape[-1]
+    g = drift_gain(spec, n, step)
+    if g is not None:
+        y = y * g
+    o = drift_offset_z(spec, n, step)
+    if o is not None:
+        y = y + sigma * o
+    if trim_gain is not None:
+        y = (y - sigma * trim_off[:n]) / trim_gain[:n]
+    return y

@@ -111,13 +111,21 @@ def guarded_dense(ctx, p, x: jnp.ndarray, spec: CIMSpec,
     unit = jnp.asarray(ws, jnp.float32) * xs
     sigma_deq = output_noise_std_int(spec, k) * unit
 
+    # temporal drift state (DESIGN.md §17): the spec already carries
+    # ctx.drift (layers.dense attached it before branching here); both the
+    # first read and the rung-1 re-read see the same drift realisation —
+    # uncalibrated drift therefore trips the checksum persistently and
+    # escalates to the digital rung, which is the designed interplay.
+    dstate = ctx.drift_state if getattr(ctx, "drift", None) is not None \
+        else None
+
     def run(sp: CIMSpec, kk):
         if ctx.cfg.cim.use_kernel:
             from repro.kernels import ops as kops
-            return kops.cim_matmul_deployed(x, wq, ws, sp, kk,
-                                            x_scale=xs).astype(x.dtype)
+            return kops.cim_matmul_deployed(x, wq, ws, sp, kk, x_scale=xs,
+                                            dstate=dstate).astype(x.dtype)
         return cim_dense(x, None, sp, kk, mode="sim", x_scale=xs,
-                         w_scale=ws, wq=wq)
+                         w_scale=ws, wq=wq, dstate=dstate)
 
     # engine-injected transient disturbance (FaultSpec.transient_mag, per
     # fault row): a hard analog fault — it corrupts the first read AND the

@@ -47,6 +47,7 @@ from repro.core.cim import (
     output_noise_std_int,
     output_noise_std_int_per_tile,
 )
+from repro.core.drift import apply_drift
 from repro.core.faults import apply_output_faults
 from repro.core.prng import seed_from_key
 from repro.kernels import ref
@@ -134,6 +135,7 @@ def cim_matmul_deployed(
     key: Optional[jax.Array],
     x_scale: Optional[jnp.ndarray] = None,
     force: Optional[str] = None,
+    dstate=None,
 ) -> jnp.ndarray:
     """Inference fast path: y ~ macro(x @ (wq * ws)) with fused act quant.
 
@@ -163,6 +165,14 @@ def cim_matmul_deployed(
     y = cim_matmul_fused_int(
         x2, wq, xs, seed, sigma, spec.in_bits, spec.macro_rows,
         scale=xs * jnp.asarray(ws, jnp.float32), force=force)
+    d = spec.drift
+    if d is not None and d.active() and dstate is not None:
+        # temporal drift (DESIGN.md §17), output-referred in dequant units —
+        # same realisation as the behavioral path (gain is multiplicative,
+        # the offset rides in z-units of the analytic sigma), applied before
+        # the static fault epilogue so stuck-ADC replacement still wins.
+        unit = (xs * jnp.asarray(ws, jnp.float32)).reshape(-1)[0]
+        y = apply_drift(y, d, output_noise_std_int(spec, k) * unit, dstate)
     f = spec.fault
     if f is not None and f.any_output_fault():
         unit = (xs * jnp.asarray(ws, jnp.float32)).reshape(-1)[0]

@@ -547,3 +547,110 @@ def ssm_decode_step_ref(
     new_state = state * da[..., None, None] + upd
     y = jnp.einsum("bhpn,bn->bhp", new_state, cm) + d[None, :, None] * xh
     return (y.reshape(-1, d_inner), conv_win[:, 1:], new_state)
+
+
+# ---------------------------------------------------------------------------
+# temporal drift oracles (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+#
+# ``core.drift`` makes every drift component a deterministic function of
+# (DriftSpec.seed, step, column). The oracle below reconstructs the fields
+# from the raw Threefry contract (broadcast draws + its own accumulation
+# loop) so a mismatch means the *seeding/eval contract* moved, not that two
+# call sites share an implementation bug.
+
+
+def drift_fields_ref(spec, n: int, step):
+    """Bit-for-bit reconstruction of ``(drift_gain, drift_offset_z)``.
+
+    Draw contract: threefry key ``(seed ^ DOMAIN_DRIFT, tag)``, counters =
+    (column, term) for the KL walk coefficients, (column, 0) for the
+    temperature sensitivities, (supply epoch, 0) for supply levels, (0, 0)
+    for the temperature phase. Walk coefficients are drawn as one broadcast
+    (n, terms) block here (vs per-term vectors in core.drift — Threefry is
+    elementwise, so the bits agree) and accumulated in the same term order
+    with the same scalar grouping, which f32 requires for bit equality.
+
+    Returns (gain, offset_z), each an (n,) f32 array or None when that
+    channel is off.
+    """
+    import math as _math
+
+    from repro.core import drift as _drift
+    from repro.core.prng import (
+        gaussian_from_bits, threefry2x32, uniform_from_bits,
+    )
+
+    t = jnp.asarray(step, jnp.float32)
+    cols = jnp.arange(n, dtype=jnp.uint32)
+    hor = float(spec.horizon)
+    dkey = jnp.uint32(spec.seed) ^ jnp.uint32(_drift.DOMAIN_DRIFT)
+
+    def draw(tag, c0, c1):
+        b0, b1 = threefry2x32(dkey, jnp.uint32(tag),
+                              jnp.asarray(c0, jnp.uint32),
+                              jnp.asarray(c1, jnp.uint32))
+        return gaussian_from_bits(b0, b1)
+
+    def walk(tag):
+        jidx = jnp.arange(spec.walk_terms, dtype=jnp.uint32)[None, :]
+        z = draw(tag, cols[:, None], jidx)                   # (n, terms)
+        acc = jnp.zeros((n,), jnp.float32)
+        for j in range(spec.walk_terms):
+            w = (j + 0.5) * _math.pi
+            acc = acc + z[:, j] * (
+                (_math.sqrt(2.0) / w) * jnp.sin((w / hor) * t))
+        return acc
+
+    def wave():
+        b0, _ = threefry2x32(dkey, jnp.uint32(_drift.TAG_TEMP_PHASE),
+                             jnp.uint32(0), jnp.uint32(0))
+        phase = (2.0 * _math.pi) * uniform_from_bits(b0)
+        return jnp.sin((2.0 * _math.pi / float(spec.temp_period)) * t
+                       + phase)
+
+    def supply(tag):
+        epoch = (jnp.asarray(step, jnp.int32)
+                 // jnp.int32(spec.supply_every)).astype(jnp.uint32)
+        return jnp.where(epoch > 0, draw(tag, epoch, jnp.uint32(0)),
+                         jnp.float32(0.0))
+
+    def field(walk_std, temp_amp, sup_mag, walk_tag, temp_tag, sup_tag):
+        val = jnp.zeros((n,), jnp.float32)
+        if walk_std > 0.0:
+            val = val + walk_std * walk(walk_tag)
+        if temp_amp > 0.0:
+            sens = draw(temp_tag, cols, jnp.uint32(0))
+            val = val + temp_amp * sens * wave()
+        if spec.supply_every > 0 and sup_mag > 0.0:
+            val = val + sup_mag * supply(sup_tag)
+        return val
+
+    gain = None
+    if spec.has_gain():
+        gain = 1.0 + field(spec.walk_gain_std, spec.temp_gain_amp,
+                           spec.supply_gain_mag, _drift.TAG_WALK_GAIN,
+                           _drift.TAG_TEMP_GAIN, _drift.TAG_SUPPLY_GAIN)
+    off = None
+    if spec.has_offset():
+        off = field(spec.walk_offset_std, spec.temp_offset_amp,
+                    spec.supply_offset_mag, _drift.TAG_WALK_OFFSET,
+                    _drift.TAG_TEMP_OFFSET, _drift.TAG_SUPPLY_OFFSET)
+    return gain, off
+
+
+def apply_drift_ref(y: jnp.ndarray, spec, sigma, dstate) -> jnp.ndarray:
+    """Bit-for-bit oracle for ``core.drift.apply_drift`` (drift fields from
+    ``drift_fields_ref`` + the same gain -> offset -> trim-inverse order)."""
+    if spec is None or dstate is None or not spec.active():
+        return y
+    step, trim_gain, trim_off = dstate
+    n = y.shape[-1]
+    gain, off = drift_fields_ref(spec, n, step)
+    if gain is not None:
+        y = y * gain
+    if off is not None:
+        y = y + sigma * off
+    if trim_gain is not None:
+        y = (y - sigma * trim_off[:n]) / trim_gain[:n]
+    return y

@@ -33,6 +33,16 @@ scenario to watch the ladder work; ``--fail-after`` arms the request-fail
 rung (failed requests print as FAILED with their structured RequestError,
 the batch keeps going).
 
+``--drift-*`` injects the temporal drift model (DESIGN.md §17) into the
+fused sim-mode engine — per-column gain/offset random walks, a coherent
+temperature excursion, abrupt supply steps — and ``--calibrate`` arms the
+online background calibration + canary watchdog against it: probe chunks
+interleave with decode (at most one launch per step), fitted trims install
+atomically, and the watchdog escalates recalibrate -> boosted recalibrate
+-> digital pin (via the PR 6 guard when ``--guard`` is armed). The run
+prints the calibration/watchdog event log and, per request, the ABFT guard
+trip/hard counts.
+
 ``--frontend`` serves through the resilient asyncio front-end
 (DESIGN.md §16) instead of one batch ``generate()`` call: bounded
 admission (``--queue-limit``, overflow shed with reason), per-request
@@ -175,7 +185,56 @@ def _build_argparser():
     ap.add_argument(
         "--temperature", type=float, default=0.0,
         help="sampling temperature (0 = greedy)")
+    # -------------------------------- temporal drift + calibration (§17)
+    ap.add_argument(
+        "--drift-walk", type=float, default=0.0,
+        help="temporal drift: per-column gain random-walk std at the KL "
+             "horizon (fused engine, --cim sim only; DESIGN.md §17)")
+    ap.add_argument(
+        "--drift-walk-offset", type=float, default=0.0,
+        help="per-column offset random-walk std, in z-units of the macro's "
+             "readout sigma")
+    ap.add_argument(
+        "--drift-temp", type=float, default=0.0,
+        help="temperature-excursion gain amplitude (global sinusoid x "
+             "per-column sensitivity)")
+    ap.add_argument(
+        "--drift-supply", type=float, default=0.0,
+        help="abrupt supply-step offset magnitude (z-units); pairs with "
+             "--drift-supply-every")
+    ap.add_argument(
+        "--drift-supply-every", type=int, default=0,
+        help="steps between supply-step events (0 = none)")
+    ap.add_argument(
+        "--drift-seed", type=int, default=0,
+        help="drift trajectory seed (deterministic, replayable)")
+    ap.add_argument(
+        "--calibrate", action="store_true",
+        help="online background calibration + canary watchdog against the "
+             "injected drift: probe chunks interleave with decode (at most "
+             "one launch per step), fitted trims install atomically, the "
+             "canary escalates through recalibrate -> digital pin "
+             "(DESIGN.md §17; needs --drift-* and deployed sim mode)")
+    ap.add_argument(
+        "--calib-every", type=int, default=256,
+        help="full-calibration cadence in engine steps")
+    ap.add_argument(
+        "--canary-every", type=int, default=8,
+        help="canary watchdog cadence in engine steps (0 disables)")
     return ap
+
+
+def _drift_from_args(args):
+    if not (args.drift_walk or args.drift_walk_offset or args.drift_temp
+            or (args.drift_supply and args.drift_supply_every)):
+        return None
+    from repro.core.drift import DriftSpec
+    return DriftSpec(seed=args.drift_seed,
+                     walk_gain_std=args.drift_walk,
+                     walk_offset_std=args.drift_walk_offset,
+                     temp_gain_amp=args.drift_temp,
+                     supply_offset_mag=args.drift_supply,
+                     supply_every=args.drift_supply_every)
 
 
 def _build_engine(args, cfg, params):
@@ -207,10 +266,25 @@ def _build_engine(args, cfg, params):
                 seed=args.fault_seed, stuck_rate=args.fault_stuck,
                 transient_mag=args.fault_transient)
             engine_kw["fault_slots"] = args.fault_slot or ()
+        drift = _drift_from_args(args)
+        if drift is not None:
+            engine_kw["drift"] = drift
+        if args.calibrate:
+            if drift is None:
+                raise SystemExit("--calibrate needs a drift model "
+                                 "(--drift-walk/--drift-temp/--drift-supply)")
+            from repro.core.calibrate import CalibPolicy
+            engine_kw["calib"] = CalibPolicy(
+                every_steps=args.calib_every,
+                canary_every=args.canary_every)
     elif args.guard or args.ladder or args.fault_stuck or args.fault_transient:
         raise SystemExit("--guard/--ladder/--fault-* need the fused engine "
                          "(--engine fused): the loop reference engine has "
                          "no guard or ladder path")
+    elif _drift_from_args(args) is not None or args.calibrate:
+        raise SystemExit("--drift-*/--calibrate need the fused engine "
+                         "(--engine fused): the loop reference engine has "
+                         "no drift or calibration path (DESIGN.md §17)")
     return engine_cls(cfg, params, max_slots=args.slots,
                       max_len=args.prompt_len + args.new_tokens + 8,
                       **engine_kw)
@@ -237,6 +311,24 @@ def _run_batch(args, engine, cfg):
         print(f"  guard: per-layer trips {trips.tolist()} / "
               f"hard {hard.tolist()} "
               f"(total {int(trips.sum())}/{int(hard.sum())})")
+        for i, r in enumerate(reqs):
+            rep = engine.guard_report_of(r)
+            if rep is not None and (rep["trips"] or rep["hard"]):
+                print(f"  req{i}: guard trips={rep['trips']} "
+                      f"hard={rep['hard']} layers={rep['hard_layers']}")
+    if getattr(engine, "drift", None) is not None:
+        evs = engine.take_drift_events()
+        cals = [e for e in evs if e["kind"] == "calibrate"]
+        trips_w = [e for e in evs if e["kind"] == "watchdog_trip"]
+        print(f"  drift: {engine.drift_step} steps, "
+              f"{len(cals)} calibrations, {len(trips_w)} watchdog trips"
+              + (", ESCALATED to digital" if engine.drift_degraded
+                 or getattr(engine, "_drift_pin_all", False) else ""))
+        for e in evs[:8]:
+            q = e.get("quality")
+            print(f"    step {e['step']}: {e['kind']}"
+                  + (f" quality={q:.2f}" if q is not None else "")
+                  + (f" [{e['action']}]" if "action" in e else ""))
     for i, err in enumerate(getattr(engine, "request_errors", [])):
         if err is not None:
             print(f"  req{i}: FAILED — {err}")
@@ -289,6 +381,8 @@ async def _run_frontend(args, engine, cfg):
               f"ttft={'-' if r.ttft_s is None else f'{r.ttft_s:.3f}s'} "
               f"toks={r.tokens_out} votes={r.votes_used} "
               f"retries={r.retries}"
+              + (f" guard={r.guard_trips}/{r.guard_hard}"
+                 if r.guard_trips is not None else "")
               + (f"  [{r.reason}]" if r.reason else ""))
     s = fe.metrics.summary()
     print(f"  summary: outcomes={s['outcomes']} "
@@ -296,6 +390,15 @@ async def _run_frontend(args, engine, cfg):
           f"ttft_p99={s['ttft_p99_s']} "
           f"degraded={s['degraded_admissions']} "
           f"transitions={s['ladder_transitions']}")
+    if getattr(engine, "drift", None) is not None:
+        print(f"  drift: {engine.drift_step} steps, "
+              f"calibrations={s['calibrations']} "
+              f"watchdog_trips={s['watchdog_trips']} "
+              f"escalations={s['drift_escalations']}")
+        for c in fe.metrics.calibrations[:8]:
+            q = c.quality
+            print(f"    step {c.step}: {c.kind}"
+                  + (f" quality={q:.2f}" if q is not None else ""))
 
 
 def main():

@@ -54,6 +54,10 @@ class Ctx:
     deployed: bool = False
     guard: Optional[Any] = None       # core.guard.GuardSpec
     fault: Optional[Any] = None       # core.faults.FaultSpec (runtime part)
+    drift: Optional[Any] = None       # core.drift.DriftSpec (DESIGN.md §17)
+    drift_state: Optional[Any] = None  # (step, trim_gain, trim_off) traced
+    # pytree — the drift evaluation time + current calibration trims; threaded
+    # per call so advancing time/trims never retraces the jitted closures
     fault_rows: Optional[jnp.ndarray] = None   # (B,) bool
     pin_rows: Optional[jnp.ndarray] = None     # (B,) bool, set per layer
     pin_layers: Optional[jnp.ndarray] = None   # (B, L) bool
@@ -123,6 +127,12 @@ def dense(ctx: Ctx, p: Params, x: jnp.ndarray, role: str) -> jnp.ndarray:
         # FaultSpec is frozen/hashable, so jit sees one spec per config)
         if ctx.fault is not None:
             spec = dataclasses.replace(spec, fault=ctx.fault)
+        # temporal drift rides the same way (DriftSpec is frozen/hashable);
+        # the evaluation step + trims travel as the traced ``dstate`` pytree
+        dstate = None
+        if ctx.drift is not None and ctx.mode == "sim":
+            spec = dataclasses.replace(spec, drift=ctx.drift)
+            dstate = ctx.drift_state
         k = ctx.next_key()
         xs = _act_scale(ctx, x, spec)
         if (ctx.guard is not None and ctx.mode == "sim"
@@ -145,13 +155,15 @@ def dense(ctx: Ctx, p: Params, x: jnp.ndarray, role: str) -> jnp.ndarray:
         if wq is not None and ctx.cfg.cim.use_kernel:
             from repro.kernels import ops as kops
             y = kops.cim_matmul_deployed(x, wq, p[f"ws{spec.w_bits}"], spec,
-                                         k, x_scale=xs).astype(x.dtype)
+                                         k, x_scale=xs,
+                                         dstate=dstate).astype(x.dtype)
         elif wq is not None:
             y = cim_dense(x, None, spec, k, mode="sim", x_scale=xs,
-                          w_scale=p[f"ws{spec.w_bits}"], wq=wq)
+                          w_scale=p[f"ws{spec.w_bits}"], wq=wq,
+                          dstate=dstate)
         else:
             y = cim_dense(x, p["w"].astype(x.dtype), spec, k, mode=ctx.mode,
-                          x_scale=xs)
+                          x_scale=xs, dstate=dstate)
         y = _degrade_noise(ctx, p, x, y, spec, k, xs)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)

@@ -274,7 +274,9 @@ class Engine:
                  fault: Any = None,
                  fault_slots: Any = None,
                  pin_slots: Any = None,
-                 ladder: Any = None):
+                 ladder: Any = None,
+                 drift: Any = None,
+                 calib: Any = None):
         if cfg.family == "encdec":
             raise ValueError("encdec serving needs per-request encoder "
                              "frames; the token-only engines don't carry them")
@@ -363,6 +365,35 @@ class Engine:
                     "ladder requires fuse_layer=False: the per-layer "
                     "megakernel bypasses layers.dense, where the per-row "
                     "degraded-vote noise is applied")
+        # temporal drift + online calibration (DESIGN.md §17): drift is a
+        # core.drift.DriftSpec evaluated at the engine's monotonic step
+        # counter; calib=True -> default CalibPolicy running the background
+        # probe/canary schedule of core.calibrate.
+        if calib is True:
+            from repro.core.calibrate import CalibPolicy
+            calib = CalibPolicy()
+        self.drift = drift or None
+        self.calib = calib or None
+        if self.drift is not None:
+            if mode != "sim":
+                raise ValueError(
+                    "drift requires cim_mode='sim': temporal drift acts on "
+                    "the analog readout chain (dequant epilogue, DESIGN.md "
+                    "§17) — there is nothing to drift on the digital path")
+            if cfg.fuse_layer:
+                raise ValueError(
+                    "drift requires fuse_layer=False: the per-layer "
+                    "megakernel bypasses the layers.dense dequant epilogue "
+                    "where drift (and its trim correction) is applied")
+        if self.calib is not None:
+            if self.drift is None:
+                raise ValueError(
+                    "calib requires drift=: background calibration "
+                    "estimates trims against the temporal drift model")
+            if not self.deployed:
+                raise ValueError(
+                    "calib requires deployed weight planes: the trim width "
+                    "is the widest deployed macro plane (core.calibrate)")
         self.fault = fault
         self.fault_slots = frozenset(int(s) for s in (fault_slots or ()))
         # pin_slots: operator knob — serve these slots on the digital path
@@ -381,6 +412,30 @@ class Engine:
         self.params = _maybe_deploy(cfg, params, self.deployed, fault=fault,
                                     guard=self.guard is not None)
 
+        # drift clock + background calibration controller. The step counter
+        # is monotonic for the engine's lifetime (macro age — begin() does
+        # NOT reset it); benches/tests may assign ``drift_step`` to jump the
+        # trajectory. The controller's probe keys chain off CalibPolicy.seed
+        # only, so enabling it never perturbs the token PRNG streams.
+        self.drift_step = 0
+        self.drift_events: List[Dict[str, Any]] = []
+        self.drift_degraded = False
+        self._drift_pin_all = False
+        self._drift_ctl = None
+        if self.calib is not None:
+            from repro.core.calibrate import DriftController, max_plane_width
+            from repro.core.sac import get_policy
+            pol = get_policy(cfg.cim.policy)
+            probe_spec = pol.mlp if pol.mlp is not None else pol.attn
+            if probe_spec is None:
+                raise ValueError(
+                    "calib needs at least one CIM-routed class in the SAC "
+                    "policy to define the probe operating point")
+            n_cols = max_plane_width(self.params)
+            self._drift_ctl = DriftController(
+                probe_spec, self.drift, self.calib, n_cols,
+                use_kernel=cfg.cim.use_kernel)
+
         # allocated once; recycled for the lifetime of the engine
         self.caches = tf.init_caches(cfg, max_slots, self._alloc_len)
         self.last_tok = jnp.zeros((max_slots,), jnp.int32)
@@ -390,7 +445,9 @@ class Engine:
         ladder_votes = (tuple(self.ladder.votes)
                         if self.ladder is not None else ())
 
-        def make_ctx(kctx, pin, frow, lvl=None):
+        drift_spec = self.drift
+
+        def make_ctx(kctx, pin, frow, lvl=None, dstate=None):
             ctx = Ctx.make(cfg, kctx, mode=mode, deployed=deployed,
                            guard=gspec, fault=fspec)
             ctx.pin_layers = pin
@@ -398,16 +455,21 @@ class Engine:
             if ladder_votes and lvl is not None:
                 ctx.degrade_levels = ladder_votes
                 ctx.degrade_rows = lvl
+            if drift_spec is not None:
+                ctx.drift = drift_spec
+                ctx.drift_state = dstate
             return ctx
 
         def prefill_fn(params, caches, last_tok, tokens, true_len, slot,
-                       temp, key, rkey, lvl, pin=None, frow=None):
+                       temp, key, rkey, lvl, dstate=None, pin=None,
+                       frow=None):
             """Prefill one request into its slot of the stacked cache."""
             # the split mirrors the legacy (kctx, ksamp) draw so the CIM
             # noise context consumes the per-step chain unchanged; sampling
             # now keys off the request identity instead of ksamp
             kctx, _ = jax.random.split(key)
-            ctx = make_ctx(kctx, pin, frow, lvl=jnp.reshape(lvl, (1,)))
+            ctx = make_ctx(kctx, pin, frow, lvl=jnp.reshape(lvl, (1,)),
+                           dstate=dstate)
             ctx.prefill_valid = jnp.reshape(true_len, (1,))
             # full zero reset, not just len: a 1-token prompt hits the SSM
             # *decode* branch, which reads conv/state — stale recurrent state
@@ -429,7 +491,7 @@ class Engine:
 
         def chunk_slot_core(params, slot_cache, prev_tok, tokens, reset,
                             valid, is_final, temp, key, rkey, lvl,
-                            pin=None, frow=None):
+                            dstate=None, pin=None, frow=None):
             """Advance ONE slot slice's prefill by one fixed-shape chunk.
 
             ``tokens``: (1, chunk_size), right-padded; ``valid`` of them are
@@ -443,7 +505,8 @@ class Engine:
             stacked cache per slot.
             """
             kctx, _ = jax.random.split(key)
-            ctx = make_ctx(kctx, pin, frow, lvl=jnp.reshape(lvl, (1,)))
+            ctx = make_ctx(kctx, pin, frow, lvl=jnp.reshape(lvl, (1,)),
+                           dstate=dstate)
             # state-carrying blocks (ssm conv/SSD) must treat the chunk's
             # right-pad as absent, not as zero tokens (models/ssm.py)
             ctx.prefill_valid = jnp.reshape(valid, (1,))
@@ -466,31 +529,32 @@ class Engine:
 
         def chunk_core(params, caches, last_tok, tokens, reset, valid,
                        is_final, slot, temp, key, rkey, lvl,
-                       pin=None, frow=None):
+                       dstate=None, pin=None, frow=None):
             """Whole-cache wrapper over ``chunk_slot_core`` (per-call path)."""
             slot_cache = tf.take_slot(caches, slot)
             slot_cache, keep, tok, ctx = chunk_slot_core(
                 params, slot_cache, last_tok[slot], tokens, reset, valid,
-                is_final, temp, key, rkey, lvl, pin, frow)
+                is_final, temp, key, rkey, lvl, dstate, pin, frow)
             caches = tf.put_slot(caches, slot_cache, slot)
             return caches, last_tok.at[slot].set(keep), tok, ctx
 
         def prefill_chunk_fn(params, caches, last_tok, tokens, reset, valid,
                              is_final, slot, temp, key, rkey, lvl,
-                             pin=None, frow=None):
+                             dstate=None, pin=None, frow=None):
             caches, last_tok, tok, ctx = chunk_core(
                 params, caches, last_tok, tokens, reset, valid, is_final,
-                slot, temp, key, rkey, lvl, pin, frow)
+                slot, temp, key, rkey, lvl, dstate, pin, frow)
             out = (caches, last_tok, tok)
             if guard_on:
                 out = out + (ctx.guard_trips, ctx.guard_hard)
             return out
 
         def decode_core(params, caches, last_tok, active, temps, key,
-                        rkeys, tok_idx, lvls, pin=None, frow=None):
+                        rkeys, tok_idx, lvls, dstate=None, pin=None,
+                        frow=None):
             """One fused step: every active slot emits its next token."""
             kctx, _ = jax.random.split(key)
-            ctx = make_ctx(kctx, pin, frow, lvl=lvls)
+            ctx = make_ctx(kctx, pin, frow, lvl=lvls, dstate=dstate)
             logits, new_caches = tf.forward(
                 params, {"tokens": last_tok[:, None]}, cfg, ctx, caches)
             toks = _sample_tokens(logits[:, -1], temps,
@@ -500,10 +564,11 @@ class Engine:
             return new_caches, toks, ctx
 
         def decode_fn(params, caches, last_tok, active, temps, key,
-                      rkeys, tok_idx, lvls, pin=None, frow=None):
+                      rkeys, tok_idx, lvls, dstate=None, pin=None,
+                      frow=None):
             new_caches, toks, ctx = decode_core(
                 params, caches, last_tok, active, temps, key, rkeys,
-                tok_idx, lvls, pin, frow)
+                tok_idx, lvls, dstate, pin, frow)
             if guard_on:
                 return new_caches, toks, ctx.guard_trips, ctx.guard_hard
             return new_caches, toks
@@ -529,7 +594,7 @@ class Engine:
             return jax.lax.scan(body, key, mask)
 
         def step_fn(params, caches, last_tok, chunk_toks, flags, temps,
-                    keys, rkeys):
+                    keys, rkeys, dstate=None):
             """One whole scheduler iteration as ONE jitted program.
 
             Collapses the per-iteration dispatch tail — up to ``max_slots``
@@ -571,7 +636,7 @@ class Engine:
                     sl, prev = ops
                     sl, keep, tok, _ = chunk_slot_core(
                         params, sl, prev, toks_s, reset, valid, final,
-                        temp, key, rkey, f[6])
+                        temp, key, rkey, f[6], dstate)
                     return sl, keep, tok
 
                 def skip(ops):
@@ -594,7 +659,7 @@ class Engine:
                 caches, last_tok = ops
                 caches, last_tok, _ = decode_core(
                     params, caches, last_tok, active, temps, keys[n_slots],
-                    rkeys, flags[:, 5], flags[:, 6])
+                    rkeys, flags[:, 5], flags[:, 6], dstate)
                 return caches, last_tok
 
             caches, last_tok = jax.lax.cond(
@@ -666,7 +731,12 @@ class Engine:
         for s in self.pin_slots:
             self._pinned[s] = True
         self._hard_counts = np.zeros((S, self.cfg.n_layers), np.int64)
+        self._trip_counts = np.zeros((S, self.cfg.n_layers), np.int64)
         self._fail_steps = np.zeros(S, np.int64)
+        # per-request guard outcome, captured when the slot retires
+        # (ri -> {"trips", "hard", "hard_layers"}) — the front-end copies
+        # it into the request's MetricsLog record
+        self.guard_report: Dict[int, Dict[str, Any]] = {}
         self._rk_slot = np.zeros((S, 2), np.uint32)   # per-slot request key
         self._lvl_slot = np.zeros(S, np.int32)        # per-slot ladder level
         self._rkeys: List[np.ndarray] = []            # per-request key
@@ -723,6 +793,7 @@ class Engine:
             self._queue.remove(r)
         else:
             s = next(i for i, o in enumerate(self._slots) if o is r)
+            self._capture_guard(s)
             self._free_slot(s)
             self._turnover = True
         self.status[ri] = outcome
@@ -786,6 +857,10 @@ class Engine:
                 self._fill_slots()
         else:
             self._percall_iteration()
+        if self.drift is not None:
+            # background calibration/watchdog (at most ONE bounded probe
+            # launch — no decode stall), then advance the macro's clock
+            self._drift_tick()
         if len(self._pend) >= self.drain_every:
             self.drain_pending()
         return True
@@ -837,6 +912,52 @@ class Engine:
                        if self.status[ri] == "failed" else r.out_tokens)
         return out
 
+    # ----------------------------------------------- drift + calibration
+    def _dstate(self):
+        """The traced drift state for this step's jitted calls: (step,
+        trim_gain, trim_off) — trims are None without a controller. One
+        pytree structure per engine config, so time never retraces."""
+        if self.drift is None:
+            return None
+        if self._drift_ctl is None:
+            return (jnp.asarray(self.drift_step, jnp.int32), None, None)
+        return self._drift_ctl.trimmed_state(self.drift_step)
+
+    def _drift_tick(self) -> None:
+        """Run the calibration/watchdog schedule for this step and advance
+        the drift clock. An "escalate" event (the trim model can no longer
+        hold the macro in spec) pins every (slot, layer) to the digital
+        path when the guard is armed — the PR 6 machinery as the ladder's
+        last rung — or flags the engine degraded otherwise."""
+        ctl = self._drift_ctl
+        if ctl is not None:
+            for e in ctl.tick(self.drift_step):
+                e = dict(e)
+                if e["kind"] == "escalate":
+                    if self.guard is not None:
+                        self._drift_pin_all = True
+                        self._pinned[:, :] = True
+                        e["action"] = "pin_digital"
+                    else:
+                        self.drift_degraded = True
+                        e["action"] = "flag_degraded"
+                self.drift_events.append(e)
+        self.drift_step += 1
+
+    def take_drift_events(self) -> List[Dict[str, Any]]:
+        """Drain accumulated calibration/watchdog events (front-end tick)."""
+        evs, self.drift_events = self.drift_events, []
+        return evs
+
+    @property
+    def calibrations(self) -> int:
+        return 0 if self._drift_ctl is None else self._drift_ctl.calibrations
+
+    @property
+    def watchdog_trips(self) -> int:
+        return (0 if self._drift_ctl is None
+                else self._drift_ctl.watchdog_trips)
+
     # ------------------------------------------------- scheduler internals
     def _free_slot(self, s: int) -> None:
         self._slots[s] = None
@@ -848,20 +969,45 @@ class Engine:
         self._reset_slot_guard(s)
 
     def _reset_slot_guard(self, s: int) -> None:
-        self._pinned[s] = s in self.pin_slots
+        # a drift escalation pins the whole engine digital — recycling a
+        # slot must not silently un-pin it
+        self._pinned[s] = (s in self.pin_slots) or self._drift_pin_all
         self._hard_counts[s] = 0
+        self._trip_counts[s] = 0
         self._fail_steps[s] = 0
+
+    def _capture_guard(self, s: int) -> None:
+        """Snapshot the retiring slot's guard counters for its request."""
+        if self.guard is None:
+            return
+        r = self._slots[s]
+        if r is None:
+            return
+        ri = self._req_index[id(r)]
+        self.guard_report[ri] = {
+            "trips": int(self._trip_counts[s].sum()),
+            "hard": int(self._hard_counts[s].sum()),
+            "hard_layers": np.nonzero(self._hard_counts[s])[0].tolist(),
+        }
+
+    def guard_report_of(self, r: Request) -> Optional[Dict[str, Any]]:
+        """Per-request guard outcome ({"trips", "hard", "hard_layers"}) or
+        None (unknown request / guard off / still running)."""
+        ri = self._req_index.get(id(r))
+        return None if ri is None else self.guard_report.get(ri)
 
     def _fail_request(self, s: int, err: RequestError) -> None:
         r = self._slots[s]
         ri = self._req_index[id(r)]
         self.status[ri] = "failed"
         self.request_errors[ri] = err
+        self._capture_guard(s)
         self._free_slot(s)
 
     def _finish_request(self, s: int) -> None:
         ri = self._req_index[id(self._slots[s])]
         self.status[ri] = "completed"
+        self._capture_guard(s)
         self._free_slot(s)
         self._turnover = True
 
@@ -880,6 +1026,9 @@ class Engine:
         dead = []
         pol = self.degrade
         for s, col in slot_cols:
+            # per-slot (slot, layer) trip attribution, surfaced in the
+            # per-request guard report (serving/metrics.py)
+            self._trip_counts[s] += t[:, col].astype(np.int64)
             hcol = h[:, col]
             if not hcol.any():
                 continue
@@ -957,7 +1106,8 @@ class Engine:
                         jnp.asarray(padded), true_len, s,
                         float(r.temperature), self._next_key(),
                         jnp.asarray(self._rk_slot[s]),
-                        np.int32(self._lvl_slot[s]), *self._guard_args(s))
+                        np.int32(self._lvl_slot[s]), self._dstate(),
+                        *self._guard_args(s))
                 except Exception as e:     # noqa: BLE001
                     self._fail_request(s, RequestError(
                         reason=f"prefill failed: {e!r}", phase="prefill",
@@ -1004,7 +1154,8 @@ class Engine:
                     jnp.asarray(valid, jnp.int32), jnp.asarray(is_final),
                     s, float(r.temperature), self._next_key(),
                     jnp.asarray(self._rk_slot[s]),
-                    np.int32(self._lvl_slot[s]), *self._guard_args(s))
+                    np.int32(self._lvl_slot[s]), self._dstate(),
+                    *self._guard_args(s))
             except Exception as e:         # noqa: BLE001
                 self._fail_request(s, RequestError(
                     reason=f"prefill chunk failed: {e!r}", phase="prefill",
@@ -1069,7 +1220,7 @@ class Engine:
                     self.params, self.caches, toks, jnp.asarray(solo),
                     temps, step_key, jnp.asarray(self._rk_slot),
                     jnp.asarray(tok_idx), jnp.asarray(self._lvl_slot),
-                    *self._guard_batch_args())
+                    self._dstate(), *self._guard_batch_args())
                 self.caches, toks = out[:2]
                 if guard_on:
                     self._note_guard(out[2], out[3], [(s, s)])
@@ -1103,7 +1254,8 @@ class Engine:
             out = self._decode(
                 self.params, self.caches, self.last_tok, active, temps,
                 step_key, jnp.asarray(self._rk_slot), jnp.asarray(tok_idx),
-                jnp.asarray(self._lvl_slot), *self._guard_batch_args())
+                jnp.asarray(self._lvl_slot), self._dstate(),
+                *self._guard_batch_args())
             self.caches, toks = out[:2]
             if guard_on:
                 gdead = self._note_guard(
@@ -1213,7 +1365,7 @@ class Engine:
                 self.params, self.caches, self.last_tok,
                 jnp.asarray(chunk_toks), jnp.asarray(flags),
                 jnp.asarray(temps_now), key_rows,
-                jnp.asarray(self._rk_slot))
+                jnp.asarray(self._rk_slot), self._dstate())
         except Exception:                  # noqa: BLE001
             self._fused_ok = False
             return False
@@ -1267,7 +1419,13 @@ class LoopEngine:
     def __init__(self, cfg: ModelConfig, params: Any, max_slots: int = 4,
                  max_len: int = 512, cim_mode: Optional[str] = None,
                  seed: int = 0, attn_impl: Optional[str] = None,
-                 deploy: Optional[bool] = None):
+                 deploy: Optional[bool] = None, drift: Any = None,
+                 calib: Any = None):
+        if drift is not None or calib:
+            raise ValueError(
+                "LoopEngine has no drift/calibration path — temporal drift "
+                "injection and background calibration are fused-Engine "
+                "features (use Engine; DESIGN.md §17)")
         cfg = _apply_attn_impl(cfg, attn_impl)
         self.cfg = cfg
         self.max_slots = max_slots

@@ -255,6 +255,10 @@ class Frontend:
         self._admit(now)
         did = self.engine.step(now=now)
         self.engine.drain_pending()
+        if getattr(self.engine, "drift", None) is not None:
+            for ev in self.engine.take_drift_events():
+                self.metrics.note_calibration(
+                    now if pinned else self.clock(), ev)
         # re-read the clock for outcome/TTFT stamps unless the caller pinned
         # ``now`` (tests): an engine step can hide seconds of compile/compute
         self._pump(now if pinned else self.clock())
@@ -415,4 +419,9 @@ class Frontend:
                 reason: Optional[str] = None) -> None:
         if t in self._live:
             self._live.remove(t)
+        if t.request is not None:
+            rep = self.engine.guard_report_of(t.request)
+            if rep is not None:
+                t.record.guard_trips = rep["trips"]
+                t.record.guard_hard = rep["hard"]
         t._close(outcome, now, reason)

@@ -55,6 +55,8 @@ class RequestRecord:
     degrade_level: int = 0            # ladder level at admission
     votes_used: Optional[int] = None  # majority-vote count at that level
     retries: int = 0                  # failure-retry attempts consumed
+    guard_trips: Optional[int] = None  # ABFT per-request (L,) trip total
+    guard_hard: Optional[int] = None   # ... hard-fault (digital-rung) total
 
     def close(self, outcome: str, now: float,
               reason: Optional[str] = None) -> "RequestRecord":
@@ -77,12 +79,24 @@ class LadderTransition:
     queue_depth: int
 
 
+@dataclasses.dataclass
+class CalibrationEvent:
+    """One background-calibration or watchdog event (DESIGN.md §17)."""
+
+    t_s: float
+    step: int                         # engine drift_step at the event
+    kind: str                         # calibrate | watchdog | escalate
+    quality: Optional[float] = None   # residual_var/sigma^2 (calibrate)
+    detail: Optional[Dict[str, object]] = None
+
+
 class MetricsLog:
     """Append-only request records + ladder transitions + summary()."""
 
     def __init__(self) -> None:
         self.records: List[RequestRecord] = []
         self.transitions: List[LadderTransition] = []
+        self.calibrations: List[CalibrationEvent] = []
 
     def open(self, rid: str, now: float) -> RequestRecord:
         rec = RequestRecord(rid=rid, submitted_s=now)
@@ -92,6 +106,16 @@ class MetricsLog:
     def note_transition(self, now: float, frm: int, to: int,
                         depth: int) -> None:
         self.transitions.append(LadderTransition(now, frm, to, depth))
+
+    def note_calibration(self, now: float, event: Dict[str, object]) -> None:
+        """Fold one engine drift event (``Engine.take_drift_events``) in."""
+        detail = {k: v for k, v in event.items()
+                  if k not in ("kind", "step", "quality")}
+        self.calibrations.append(CalibrationEvent(
+            t_s=now, step=int(event.get("step", -1)),
+            kind=str(event.get("kind", "?")),
+            quality=event.get("quality"),
+            detail=detail or None))
 
     def summary(self) -> Dict[str, object]:
         recs = self.records
@@ -116,4 +140,12 @@ class MetricsLog:
             "ladder_transitions": len(self.transitions),
             "shed_fraction": (by_outcome.get("shed", 0) / len(recs)
                               if recs else 0.0),
+            "calibrations": sum(c.kind == "calibrate"
+                                for c in self.calibrations),
+            "watchdog_trips": sum(c.kind == "watchdog_trip"
+                                  for c in self.calibrations),
+            "drift_escalations": sum(c.kind == "escalate"
+                                     for c in self.calibrations),
+            "guard_trips_total": sum(r.guard_trips or 0 for r in recs),
+            "guard_hard_total": sum(r.guard_hard or 0 for r in recs),
         }

@@ -1,0 +1,333 @@
+"""Temporal drift + online calibration + canary watchdog (DESIGN.md §17).
+
+Layers under test: ``core.drift`` (the deterministic drift model and its
+bit-for-bit ``kernels.ref`` oracle), ``core.calibrate`` (probe regression,
+trims, watchdog state machine), the drift threading through behavioral /
+deployed / guarded dense paths, and the serving engine's drift clock +
+escalation. The long soak (accuracy collapse vs recovery) is bench-only
+(``benchmarks/drift_bench.py``); here we test the contracts the soak rests
+on: exact zero-drift identity, cross-process determinism, trim convergence
+within the analytic estimator noise, and bounded watchdog latency.
+"""
+
+import dataclasses
+import hashlib
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.calibrate import (CalibPolicy, DriftController,
+                                  detection_bound, estimate_trims,
+                                  max_plane_width)
+from repro.core.cim import CIMSpec, cim_matmul_behavioral, cim_dense
+from repro.core.drift import DriftSpec, apply_drift, drift_gain, \
+    drift_offset_z
+from repro.kernels import ref as kref
+from repro.models.model import build
+from repro.serving.engine import Engine, LoopEngine, Request
+
+FULL = DriftSpec(seed=11, walk_gain_std=0.05, walk_offset_std=1.5,
+                 temp_gain_amp=0.03, temp_offset_amp=0.8, temp_period=512,
+                 supply_gain_mag=0.1, supply_offset_mag=6.0,
+                 supply_every=64)
+
+
+def _tiny_lm(**over):
+    cfg = get_config("qwen2-0.5b").reduced()
+    return dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=256,
+                               vocab_size=128, n_heads=4, n_kv_heads=2,
+                               head_dim=32, **over)
+
+
+# ----------------------------------------------------------- model + oracle
+
+
+@pytest.mark.parametrize("step", [0, 1, 137, 4095, 65536])
+def test_drift_fields_match_ref_bitexact(step):
+    """Impl (per-term Python loop) vs oracle (broadcast threefry block):
+    different code shapes, identical counters and accumulation order →
+    identical bits."""
+    n = 96
+    gain, off = kref.drift_fields_ref(FULL, n, step)
+    np.testing.assert_array_equal(np.asarray(drift_gain(FULL, n, step)),
+                                  np.asarray(gain))
+    np.testing.assert_array_equal(np.asarray(drift_offset_z(FULL, n, step)),
+                                  np.asarray(off))
+
+
+def test_apply_drift_matches_ref_with_trims():
+    y = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    tg = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (64,))
+    to = 0.3 * jax.random.normal(jax.random.PRNGKey(2), (64,))
+    dstate = (jnp.int32(777), tg, to)
+    got = apply_drift(y, FULL, 0.25, dstate)
+    want = kref.apply_drift_ref(y, FULL, 0.25, dstate)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_supply_epoch_semantics():
+    """Supply level: zero through epoch 0, constant within an epoch, and a
+    fresh draw across the boundary."""
+    spec = DriftSpec(seed=4, supply_offset_mag=5.0, supply_every=100)
+    off = lambda t: np.asarray(drift_offset_z(spec, 8, t))
+    np.testing.assert_array_equal(off(0), np.zeros(8))
+    np.testing.assert_array_equal(off(99), np.zeros(8))
+    np.testing.assert_array_equal(off(100), off(199))
+    assert not np.array_equal(off(199), off(200))
+    # common mode: every column sees the same supply level
+    assert np.unique(off(150)).size == 1
+
+
+def test_zero_rate_drift_is_exact_identity():
+    """An all-zero DriftSpec (and dstate=None) must be a bit-exact no-op
+    through the behavioral matmul — the 'safe to leave compiled in' gate."""
+    spec = CIMSpec()
+    k = jax.random.PRNGKey(3)
+    xq = jax.random.randint(k, (8, 128), -31, 32, jnp.int32)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (128, 64), -31, 32,
+                            jnp.int32)
+    base = cim_matmul_behavioral(xq, wq, jax.random.PRNGKey(7), spec)
+    zspec = dataclasses.replace(spec, drift=DriftSpec(seed=9))
+    got = cim_matmul_behavioral(xq, wq, jax.random.PRNGKey(7), zspec,
+                                (jnp.int32(123), None, None))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+    got2 = cim_matmul_behavioral(xq, wq, jax.random.PRNGKey(7),
+                                 dataclasses.replace(spec, drift=FULL), None)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got2))
+
+
+def test_deployed_and_behavioral_see_same_drift_field():
+    """Deployed and behavioral paths draw *independent* readout noise (tile
+    PRNG vs jax.random.normal), but the drift field they apply must be the
+    SAME realisation, each in its own units: the with-drift-minus-without
+    delta on both paths equals ``y0*(gain-1) + sigma*offset_z`` exactly."""
+    from repro.core import quant
+    from repro.core.cim import output_noise_std_int
+    from repro.kernels import ops as kops
+
+    spec = dataclasses.replace(CIMSpec(), drift=FULL)
+    k = jax.random.PRNGKey(5)
+    x = jax.random.normal(k, (6, 128))
+    qw = quant.qmax(spec.w_bits)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (128, 64), -qw,
+                            qw + 1, jnp.int32)
+    ws = jnp.float32(1.0 / qw)
+    xs = quant.abs_max_scale(x.astype(jnp.float32), spec.in_bits)
+    xq = quant.quantize(x.astype(jnp.float32), xs, spec.in_bits)
+    step = 321
+    dstate = (jnp.int32(step), None, None)
+    key = jax.random.PRNGKey(2)
+    g = np.asarray(drift_gain(FULL, 64, step))
+    oz = np.asarray(drift_offset_z(FULL, 64, step))
+    sig = output_noise_std_int(spec, 128)
+    unit = np.asarray(xs * ws)
+
+    dep = np.asarray(kops.cim_matmul_deployed(
+        x, wq.astype(jnp.int8), ws, spec, key, x_scale=xs, dstate=dstate))
+    dep0 = np.asarray(kops.cim_matmul_deployed(
+        x, wq.astype(jnp.int8), ws, spec, key, x_scale=xs, dstate=None))
+    np.testing.assert_allclose(dep - dep0,
+                               dep0 * (g - 1.0) + sig * unit * oz,
+                               atol=1e-4)
+    beh = np.asarray(cim_matmul_behavioral(xq, wq, key, spec, dstate))
+    beh0 = np.asarray(cim_matmul_behavioral(xq, wq, key, spec, None))
+    np.testing.assert_allclose(beh - beh0, beh0 * (g - 1.0) + sig * oz,
+                               rtol=1e-5, atol=1e-2)
+
+
+_DIGEST_PROG = r"""
+import hashlib, numpy as np
+from repro.core.drift import DriftSpec, drift_gain, drift_offset_z
+spec = DriftSpec(seed=11, walk_gain_std=0.05, walk_offset_std=1.5,
+                 temp_gain_amp=0.03, temp_offset_amp=0.8, temp_period=512,
+                 supply_gain_mag=0.1, supply_offset_mag=6.0,
+                 supply_every=64)
+h = hashlib.sha256()
+for step in (0, 1, 63, 64, 512, 4096):
+    h.update(np.asarray(drift_gain(spec, 96, step)).tobytes())
+    h.update(np.asarray(drift_offset_z(spec, 96, step)).tobytes())
+print(h.hexdigest())
+"""
+
+
+def test_drift_deterministic_across_processes():
+    """Same seed + step sequence → bit-identical trajectory in a fresh
+    process (counter-based PRNG: no hidden global state)."""
+    h = hashlib.sha256()
+    for step in (0, 1, 63, 64, 512, 4096):
+        h.update(np.asarray(drift_gain(FULL, 96, step)).tobytes())
+        h.update(np.asarray(drift_offset_z(FULL, 96, step)).tobytes())
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(sys.path))
+    out = subprocess.run([sys.executable, "-c", _DIGEST_PROG], env=env,
+                         capture_output=True, text=True, check=True)
+    assert out.stdout.strip() == h.hexdigest()
+
+
+# ------------------------------------------------------------- calibration
+
+
+def test_estimate_trims_recovers_affine_distortion():
+    """On a synthetic affine distortion + gaussian noise the least-squares
+    trims must converge within the analytic estimator noise floors
+    (~sigma/(std(d)*sqrt(M)) on gain, ~sigma/sqrt(M) on offset)."""
+    rng = np.random.default_rng(0)
+    m, n, sigma = 256, 48, 0.2
+    d = rng.normal(size=(m, n)).astype(np.float32)
+    gain = 1.0 + 0.1 * rng.normal(size=n).astype(np.float32)
+    off_z = 2.0 * rng.normal(size=n).astype(np.float32)
+    y = gain * d + sigma * off_z + sigma * rng.normal(size=(m, n))
+    g, o, q = estimate_trims(jnp.asarray(y), jnp.asarray(d), sigma)
+    tol = 6.0 * sigma / np.sqrt(m)          # 6x the 1-sigma estimator noise
+    np.testing.assert_allclose(np.asarray(g), gain, atol=tol)
+    np.testing.assert_allclose(np.asarray(o), off_z, atol=6.0 / np.sqrt(m))
+    assert 0.5 < q < 2.0                    # residual var ~ sigma^2
+
+
+def test_controller_calibrates_static_drift_within_noise():
+    """Against a frozen drift realisation the controller's trims must match
+    the true drift field to within the probe-regression noise, and the
+    trimmed canary must sit quiet."""
+    drift = DriftSpec(seed=2, walk_gain_std=0.2, walk_offset_std=3.0,
+                      horizon=1000)
+    pol = CalibPolicy(probe_rows=128, probe_chunk=64, probe_k=256,
+                      every_steps=10 ** 6, canary_every=2)
+    n = 64
+    ctl = DriftController(CIMSpec(), drift, pol, n, use_kernel=False)
+    step = 500                               # mid-walk, frozen
+    for _ in range(pol.chunks_for(False) + 1):   # tick 0 only schedules
+        ctl.tick(step)
+    assert ctl.calibrations == 1
+    assert ctl.last_quality < pol.quality_max
+    true_gain = np.asarray(drift_gain(drift, n, step))
+    true_off = np.asarray(drift_offset_z(drift, n, step))
+    assert float(np.max(np.abs(np.asarray(ctl.trim_gain) - true_gain))) < 0.1
+    assert float(np.max(np.abs(np.asarray(ctl.trim_off) - true_off))) < 1.5
+    # trimmed canary at the same step: no trip
+    assert ctl.tick(step + 2) == []
+    assert ctl.watchdog_trips == 0
+
+
+def test_watchdog_flags_abrupt_drift_within_bound():
+    """A supply step must trip the trim-corrected canary within the
+    analytic detection bound and trigger a recalibration."""
+    every = 30
+    drift = DriftSpec(seed=7, supply_offset_mag=20.0, supply_every=every)
+    pol = CalibPolicy(probe_rows=32, probe_chunk=16, probe_k=128,
+                      every_steps=10 ** 6, canary_every=3)
+    ctl = DriftController(CIMSpec(), drift, pol, n_cols=64,
+                          use_kernel=False)
+    trip = None
+    for step in range(every + detection_bound(pol) + 1):
+        for e in ctl.tick(step):
+            if e["kind"] == "watchdog_trip" and trip is None \
+                    and step >= every:
+                trip = step
+    assert trip is not None
+    assert trip - every <= detection_bound(pol)
+    assert ctl.calibrations >= 2             # initial + watchdog-triggered
+
+
+def test_controller_escalates_on_unfittable_drift():
+    """Consecutive low-quality fits must escalate exactly once (the affine
+    trim model cannot hold the macro in spec) and then hold the macro
+    parked — no further probe spend."""
+    ctl = DriftController(CIMSpec(),
+                          DriftSpec(seed=0, walk_gain_std=0.1),
+                          CalibPolicy(probe_rows=16, probe_chunk=16,
+                                      probe_k=64, every_steps=10 ** 6,
+                                      max_recals=1, quality_max=4.0),
+                          n_cols=32, use_kernel=False)
+    # poison the oracle so every fit's residual is hopeless
+    ctl._digital = ctl._digital + 1e3 * np.sign(
+        np.random.default_rng(0).normal(size=ctl._digital.shape))
+    events = []
+    for step in range(64):
+        events.extend(ctl.tick(step))
+        if ctl.escalated:
+            break
+    kinds = [e["kind"] for e in events]
+    assert kinds.count("escalate") == 1
+    assert ctl.escalated and ctl.tick(1000) == []
+
+
+def test_max_plane_width_sees_stacked_planes():
+    cfg = _tiny_lm()
+    params, _ = build(cfg).init(jax.random.PRNGKey(0))
+    from repro.core.deploy import deploy
+    assert max_plane_width(deploy(cfg, params)) >= cfg.d_ff
+
+
+# ----------------------------------------------------------------- serving
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = _tiny_lm()
+    params, _ = build(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(n=2, toks=5):
+    rng = np.random.default_rng(0)
+    return [Request(prompt=rng.integers(1, 127, size=l).astype(np.int32),
+                    max_new_tokens=toks) for l in (7, 11)[:n]]
+
+
+def test_engine_zero_drift_bit_identical(lm_setup):
+    """DESIGN §17 acceptance: an engine carrying an all-zero DriftSpec is
+    token-identical to the drift-free engine (pre-PR behavior)."""
+    cfg, params = lm_setup
+    kw = dict(max_slots=2, max_len=48, cim_mode="sim", seed=0, deploy=True)
+    base = Engine(cfg, params, **kw).generate(_reqs())
+    zero = Engine(cfg, params, drift=DriftSpec(seed=5), **kw).generate(
+        _reqs())
+    assert [list(t) for t in base] == [list(t) for t in zero]
+
+
+def test_engine_drift_calibration_and_clock(lm_setup):
+    """Calibration interleaves with decode (events recorded, clock
+    monotonic across generate() calls) and changes no request's terminal
+    outcome."""
+    cfg, params = lm_setup
+    drift = DriftSpec(seed=3, walk_gain_std=0.02, walk_offset_std=0.5,
+                      supply_offset_mag=8.0, supply_every=16)
+    pol = CalibPolicy(probe_rows=16, probe_chunk=16, probe_k=128,
+                      every_steps=32, canary_every=4)
+    eng = Engine(cfg, params, max_slots=2, max_len=48, cim_mode="sim",
+                 seed=0, deploy=True, drift=drift, calib=pol)
+    out = eng.generate(_reqs())
+    assert all(len(t) == 5 for t in out)
+    assert eng.calibrations >= 1
+    evs = eng.take_drift_events()
+    assert any(e["kind"] == "calibrate" for e in evs)
+    assert eng.take_drift_events() == []       # drained
+    step_after = eng.drift_step
+    assert step_after > 0
+    eng.generate(_reqs())
+    assert eng.drift_step > step_after         # monotonic, never reset
+
+
+def test_engine_drift_validation(lm_setup):
+    cfg, params = lm_setup
+    with pytest.raises(ValueError, match="sim"):
+        Engine(cfg, params, cim_mode="off", drift=FULL)
+    with pytest.raises(ValueError, match="drift"):
+        Engine(cfg, params, cim_mode="sim", deploy=True, calib=True)
+    with pytest.raises(ValueError, match="deploy"):
+        Engine(cfg, params, cim_mode="sim", deploy=False, drift=FULL,
+               calib=True)
+
+
+def test_loop_engine_rejects_drift(lm_setup):
+    cfg, params = lm_setup
+    with pytest.raises(ValueError, match="LoopEngine"):
+        LoopEngine(cfg, params, drift=FULL)
+    with pytest.raises(ValueError, match="LoopEngine"):
+        LoopEngine(cfg, params, calib=True)
