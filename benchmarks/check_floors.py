@@ -117,6 +117,18 @@ def check_faults() -> None:
               f"(ungated rates {gate['ungated_rates']}: {gate['reason']})")
         _floor(f"cell_only_recall@{gate['dense_rate']}",
                sweep[gate["dense_rate"]], ">=", gate["dense_min_recall"])
+    # segmented ABFT (PR 10): the 0.05 dilute rate graduates to the gated
+    # set — per-segment sums face a sqrt(G)-lower noise floor — and
+    # segmentation must not buy detection with false trips
+    sgate = run.get("segmented_cell_gate")
+    if sgate is not None:
+        sweep = run["segmented_cell_detection_by_rate"]
+        print(f"segmented (G={run['segments']}) sweep: {sweep} "
+              f"(still ungated {sgate['ungated_rates']}: {sgate['reason']})")
+        _floor(f"segmented_recall@{sgate['gated_rate']}",
+               sweep[sgate["gated_rate"]], ">=", sgate["min_recall"])
+        _floor("segmented_zero_fault_false_trip_rate",
+               run["segmented_zero_fault_false_trip_rate"], "<=", 0.01)
     _floor("guarded_drop_pt", run["guarded_drop_pt"], "<=", 1.0)
     _floor("victim_token_match_vs_digital",
            run["victim_token_match_vs_digital"], ">=", 1.0)
@@ -252,9 +264,41 @@ def check_drift() -> None:
            ">=", 1.0)
 
 
+def check_scaleout() -> None:
+    """§18 scale-out: TP dryrun plans must resolve for both target configs,
+    the live sharded deploy must be placement-only (bit-identical planes),
+    modeled replica scaling >= 0.7x linear at N=4 (busy-time model — the
+    CI host is one core, so parallel wall clock is unobservable; the
+    serial wall ratio is printed as ungated context), and the failover
+    soak must lose nothing: every stream terminal, none silently short,
+    every kill/wedge-migrated stream bit-identical to its unkilled twin."""
+    run = last_with("BENCH_scaleout.json", "scaling_x_n4")
+    for name, plan in run["dryrun"].items():
+        print(f"dryrun {name}: planes {plan['weight_planes']} "
+              f"(tp {plan['tp_sharded_planes']}), "
+              f"{plan['int8_gib_total']} GiB -> "
+              f"{plan['int8_gib_per_device']} GiB/device")
+        _floor(f"dryrun_ok[{name}]", float(plan["ok"]), ">=", 1.0)
+        _floor(f"tp_sharded_planes[{name}]",
+               plan["tp_sharded_planes"], ">=", 1)
+    _floor("shard_bit_identical", run["shard_bit_identical"], ">=", 1.0)
+    _floor("shard_multi_device_planes",
+           run["shard_multi_device_planes"], ">=", 1)
+    print(f"serial_wall_ratio_n4 = {run['serial_wall_ratio_n4']} "
+          "(context, ungated: one-core host)")
+    _floor("scaling_x_n4", run["scaling_x_n4"], ">=", 2.8)
+    _floor("soak_lost", run["soak_lost"], "<=", 0)
+    _floor("soak_wedged_streams", run["soak_wedged_streams"], "<=", 0)
+    _floor("soak_migrated", run["soak_migrated"], ">=", 1)
+    _floor("migrated_bit_identical",
+           run["migrated_bit_identical"], ">=", 1.0)
+    _floor("storm_victim_drained", run["storm_victim_drained"], ">=", 1.0)
+
+
 CHECKS = {"deploy": check_deploy, "prefill": check_prefill,
           "faults": check_faults, "megakernel": check_megakernel,
-          "overload": check_overload, "drift": check_drift}
+          "overload": check_overload, "drift": check_drift,
+          "scaleout": check_scaleout}
 
 
 def main(argv) -> None:

@@ -1,0 +1,272 @@
+"""Scale-out campaign (DESIGN.md §18): sharded deploy, replica scaling,
+failover soak — recorded into BENCH_scaleout.json and gated by
+``check_floors.py scaleout``.
+
+Three parts on a forced 8-way host-device mesh (one process, eight XLA
+CPU devices — the same trick the dryrun uses at 512):
+
+  A. **sharded deploy**: shape-only TP plans for the two scale-out target
+     configs (deepseek-v2-236b, zamba2-7b) on the production-sized
+     16x16 virtual mesh — every int8 weight plane must resolve logical
+     axes and the TP axis must actually shard (gated ok flags); plus a
+     *live* 2-device deploy of the bench model whose plane values must be
+     bit-identical to the single-device deploy (sharding is placement,
+     applied after quantization/checksum/fault injection).
+  B. **replica scaling**: N=1 vs N=4 pools on distinct forced devices,
+     router ``timing=True``. The CI host is ONE core, so parallel wall
+     clock is physically unobservable; the router records per-replica
+     device-busy seconds instead, and the gated figure is modeled:
+     ``tok/s(N) = tokens / (max_i busy_i + router host overhead)`` — what
+     N truly-parallel devices would deliver for the same schedule. The
+     serial wall-clock ratio is recorded ungated as context.
+  C. **failover soak**: kill / wedge / storm scenarios on 3-replica
+     pools. Gates: zero lost requests (every submission reaches a
+     terminal outcome), zero wedged streams, and every migrated request's
+     stream bit-identical to its unkilled single-engine twin (the
+     deterministic-migration contract: same seed + same rid replays
+     anywhere, delivery appends past the delivered cursor only).
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import append_run, tiny_serving_setup  # noqa: E402
+
+DRYRUN_CONFIGS = ("deepseek-v2-236b", "zamba2-7b")
+SOAK_REPLICAS = 3
+SCALE_N = 4
+
+
+# ------------------------------------------------------------------ Part A
+
+
+def sharded_deploy_dryrun() -> dict:
+    from repro.configs.registry import get_config
+    from repro.core.deploy import plan_deploy_sharding
+    from repro.distributed.sharding import VirtualMesh, default_rules
+
+    vm = VirtualMesh.make(data=16, model=16)
+    rules = default_rules(vm)
+    out = {}
+    for name in DRYRUN_CONFIGS:
+        plan = plan_deploy_sharding(get_config(name), rules)
+        out[name] = {
+            "ok": bool(plan["ok"]),
+            "weight_planes": plan["weight_planes"],
+            "tp_sharded_planes": plan["tp_sharded_planes"],
+            "tp_sharded_frac": round(plan["tp_sharded_frac"], 4),
+            "int8_gib_total": round(plan["int8_bytes_total"] / 2**30, 3),
+            "int8_gib_per_device": round(
+                plan["int8_bytes_per_device"] / 2**30, 4),
+        }
+    return {"dryrun_mesh": dict(vm.shape), "dryrun": out}
+
+
+def sharded_deploy_live() -> dict:
+    """Live 2-device TP deploy of the bench model: bit-identity + one
+    jitted dequant matmul on the sharded plane (executability witness)."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from repro.core.deploy import deploy
+    from repro.distributed.sharding import default_rules
+
+    cfg, params = tiny_serving_setup()
+    mesh = jax.make_mesh((1, 2), ("data", "model"),
+                         devices=jax.devices("cpu")[:2])
+    plain = deploy(cfg, params, guard=True)
+    shard = deploy(cfg, params, guard=True, rules=default_rules(mesh))
+
+    stats = {"planes": 0, "multi_device_planes": 0, "mismatched_planes": 0}
+
+    def walk(a, b):
+        for k in a:
+            if isinstance(a[k], dict):
+                walk(a[k], b[k])
+            elif k.startswith(("wq", "ws", "wc")) or k.endswith(("_q", "_s")):
+                stats["planes"] += 1
+                if isinstance(b[k].sharding, NamedSharding) \
+                        and len(b[k].sharding.device_set) > 1:
+                    stats["multi_device_planes"] += 1
+                if not np.array_equal(np.asarray(a[k]), np.asarray(b[k])):
+                    stats["mismatched_planes"] += 1
+
+    walk(plain, shard)
+
+    p = jax.tree.map(lambda t: t[0], shard["blocks"]["attn"]["q"])
+    pr = jax.tree.map(lambda t: t[0], plain["blocks"]["attn"]["q"])
+    bits = [k[2:] for k in p if k.startswith("wq")][0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model))
+    f = jax.jit(lambda w, s, v: (v @ w.astype(jnp.float32)) * s)
+    err = float(jnp.max(jnp.abs(f(p["wq" + bits], p["ws" + bits], x)
+                                - f(pr["wq" + bits], pr["ws" + bits], x))))
+    return {
+        "shard_planes": stats["planes"],
+        "shard_multi_device_planes": stats["multi_device_planes"],
+        "shard_bit_identical": int(stats["mismatched_planes"] == 0
+                                   and stats["planes"] > 0),
+        "shard_exec_max_err": err,      # context, ungated (0.0 expected)
+    }
+
+
+# ------------------------------------------------------------------ Part B
+
+
+def _requests(cfg, n, max_new=16, seed=0):
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, 6 + (i % 5),
+                                        dtype=np.int32),
+                    max_new_tokens=max_new, rid=f"s-{i}")
+            for i in range(n)]
+
+
+def scaling() -> dict:
+    from repro.serving.router import ReplicaRouter, build_pool
+
+    cfg, params = tiny_serving_setup()
+    devs = jax.devices("cpu")
+    results = {}
+    for n in (1, SCALE_N):
+        router = ReplicaRouter(
+            build_pool(cfg, params, n, devices=devs[:n],
+                       max_slots=2, max_len=48, cim_mode="off"),
+            timing=True)
+        reqs = _requests(cfg, 2 * n, max_new=16)
+        # warmup: compile every shape bucket off the clock
+        router.generate(_requests(cfg, 2 * n, max_new=4, seed=9))
+        router.busy_s = [0.0] * n
+        router.host_s = 0.0
+        t0 = time.perf_counter()
+        out = router.generate(reqs)
+        wall = time.perf_counter() - t0
+        toks = sum(len(o) for o in out if isinstance(o, list))
+        modeled_wall = max(router.busy_s) + router.host_s
+        results[n] = {
+            "tokens": toks,
+            "serial_wall_s": round(wall, 4),
+            "busy_s": [round(b, 4) for b in router.busy_s],
+            "host_s": round(router.host_s, 4),
+            "modeled_parallel_wall_s": round(modeled_wall, 4),
+            "modeled_tok_s": round(toks / modeled_wall, 2),
+        }
+    base = results[1]["modeled_tok_s"]
+    scaled = results[SCALE_N]["modeled_tok_s"]
+    return {
+        "scaling": {str(k): v for k, v in results.items()},
+        # gated: modeled parallel throughput scaling on the busy-time model
+        # (the 1-core CI host cannot show parallel wall clock; DESIGN.md §18)
+        "scaling_x_n4": round(scaled / base, 3),
+        # ungated context: serial wall ratio on one core (~1.0 expected)
+        "serial_wall_ratio_n4": round(
+            results[1]["serial_wall_s"] / results[SCALE_N]["serial_wall_s"],
+            3),
+    }
+
+
+# ------------------------------------------------------------------ Part C
+
+
+def failover_soak() -> dict:
+    from repro.core.faults import ReplicaFaultSpec
+    from repro.serving.engine import Engine, Request, RequestError
+    from repro.serving.router import ReplicaRouter, build_pool
+
+    cfg, params = tiny_serving_setup()
+    devs = jax.devices("cpu")
+
+    def reference(reqs):
+        eng = Engine(cfg, params, max_slots=len(reqs), max_len=48,
+                     cim_mode="off", seed=0)
+        return eng.generate([Request(prompt=r.prompt,
+                                     max_new_tokens=r.max_new_tokens,
+                                     temperature=r.temperature, rid=r.rid)
+                             for r in reqs])
+
+    scenarios = {
+        "kill": dict(fault=ReplicaFaultSpec(mode="kill", at_step=6,
+                                            victim=1),
+                     pool_kw=dict(cim_mode="off")),
+        "wedge": dict(fault=ReplicaFaultSpec(mode="wedge", at_step=5,
+                                             victim=0),
+                      pool_kw=dict(cim_mode="off")),
+        "storm": dict(fault=ReplicaFaultSpec(mode="storm", victim=2,
+                                             storm_transient_mag=64.0),
+                      pool_kw=dict(cim_mode="sim", guard=True)),
+    }
+    out = {}
+    lost = wedged = 0
+    migrated_total = 0
+    migrated_identical = 1
+    for name, sc in scenarios.items():
+        reqs = _requests(cfg, 6, max_new=12, seed=3)
+        ref = reference(reqs)
+        router = ReplicaRouter(
+            build_pool(cfg, params, SOAK_REPLICAS,
+                       replica_fault=sc["fault"],
+                       devices=devs[:SOAK_REPLICAS],
+                       max_slots=2, max_len=48, **sc["pool_kw"]),
+            replica_fault=sc["fault"])
+        res = router.generate(reqs)
+        terminal = sum(router.status_of(r) is not None
+                       and router.status_of(r) != "running" for r in reqs)
+        lost += len(reqs) - terminal
+        # a wedged stream = terminal-but-short successful result
+        wedged += sum(1 for o, r in zip(res, reqs)
+                      if isinstance(o, list) and len(o) < r.max_new_tokens)
+        migrated = [i for i, r in enumerate(reqs)
+                    if router.migrations_of(r) > 0]
+        migrated_total += len(migrated)
+        if name != "storm":
+            # storm victims may legitimately finish on the (pinned) victim;
+            # kill/wedge streams must match the unkilled twin bit-for-bit
+            for i, (o, rf) in enumerate(zip(res, ref)):
+                if isinstance(o, list) and o != rf:
+                    migrated_identical = 0
+        failed = sum(isinstance(o, RequestError) for o in res)
+        out[name] = {
+            "requests": len(reqs),
+            "completed": sum(isinstance(o, list) for o in res),
+            "failed": failed,
+            "migrated": len(migrated),
+            "events": [{k: v for k, v in e.items() if k != "step"}
+                       for e in router.events][:12],
+            "replica_states": router.replica_states(),
+        }
+        if name == "storm":
+            out[name]["victim_drained"] = int(any(
+                e["kind"] == "drain" and e["replica"] == "r2"
+                for e in router.events))
+    return {
+        "soak": out,
+        "soak_replicas": SOAK_REPLICAS,
+        "soak_lost": lost,
+        "soak_wedged_streams": wedged,
+        "soak_migrated": migrated_total,
+        "migrated_bit_identical": migrated_identical,
+        "storm_victim_drained": out["storm"]["victim_drained"],
+    }
+
+
+def run() -> dict:
+    out = {"host_devices": len(jax.devices("cpu"))}
+    out.update(sharded_deploy_dryrun())
+    out.update(sharded_deploy_live())
+    out.update(scaling())
+    out.update(failover_soak())
+    append_run("BENCH_scaleout.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

@@ -42,15 +42,17 @@ sibling ``<name>_q`` / ``<name>_s`` planes with the per-tensor scale
 from __future__ import annotations
 
 import re
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig
 from repro.core import quant
 from repro.core.faults import FaultSpec, stuck_bit_plane
 from repro.core.sac import Policy, get_policy
+from repro.distributed.sharding import ShardingRules, tp_axis
 
 # parameter-dict key -> SAC role, mirroring the call sites in
 # models/{attention,layers,moe,ssm,vit}.py. q/k/v/o resolve against the
@@ -74,6 +76,44 @@ def _role_for(name: str, parent: Optional[str]) -> Optional[str]:
     return role
 
 
+def guard_segments_of(guard: Any) -> int:
+    """Checksum segment count from a guard flag/spec (bool legacy -> 1)."""
+    return int(getattr(guard, "segments", 1) or 1)
+
+
+def pick_segments(n_cols: int, requested: int) -> int:
+    """Largest divisor of the plane's output width <= the requested G.
+
+    Per-segment sums need equal-width segments; a non-dividing request
+    degrades gracefully to the nearest coarser segmentation instead of
+    raising (a 14-head 1792-wide plane with G=32 gets G=28... whichever
+    divisor lands).
+    """
+    g = max(1, min(int(requested), n_cols))
+    while n_cols % g != 0:
+        g -= 1
+    return g
+
+
+def checksum_plane(wq: jnp.ndarray, segments: int = 1) -> jnp.ndarray:
+    """ABFT checksum of a clean int plane: per-segment column-group sums.
+
+    ``segments == 1`` keeps the PR 6 layout — one int32 column ``(..., K)``
+    summed over the whole output axis. ``segments == G`` splits the output
+    axis into G equal column groups and sums each: ``(..., K, G)``. The
+    guard then checks G independent sums per tile; a single large flip
+    keeps its full magnitude inside one segment while that segment's noise
+    floor drops ~sqrt(G), which is what makes dilute flips detectable
+    (core/guard.py, DESIGN.md §14/§18).
+    """
+    w32 = wq.astype(jnp.int32)
+    if segments <= 1:
+        return w32.sum(axis=-1)
+    n = wq.shape[-1]
+    g = pick_segments(n, segments)
+    return w32.reshape(wq.shape[:-1] + (g, n // g)).sum(axis=-1)
+
+
 def quantize_plane(w: jnp.ndarray, bits: int, reduce_axes: int):
     """Batched abs-max symmetric quantization over the trailing axes.
 
@@ -92,10 +132,40 @@ def quantize_plane(w: jnp.ndarray, bits: int, reduce_axes: int):
     return wq, ws.reshape(w.shape[:w.ndim - reduce_axes])
 
 
+def plane_logical_axes(names, plane: str,
+                       segmented: bool = False) -> Optional[tuple]:
+    """Logical-axis names of a deployed plane, derived from its base weight.
+
+    The planes inherit the base weight's sharding geometry (they are just
+    per-slice transforms of it), so their specs are *derived*, never
+    hand-written — the same derivation drives the live ``deploy(rules=)``
+    device_put path and the devices-free ``plan_deploy_sharding`` dryrun:
+
+      * ``wq`` / ``_q``: the weight's own axes (same shape);
+      * ``ws``: trailing 2 (dense) / 3 (expert bank) axes reduced away;
+      * ``wc``: output-column axis reduced; segmented checksums keep a
+        trailing unsharded segment dim.
+    """
+    if names is None:
+        return None
+    names = tuple(names)
+    if plane in ("wq", "_q"):
+        return names
+    if plane == "ws":
+        return names[:-2]
+    if plane == "_s":
+        return names[:-3]
+    if plane == "wc":
+        return names[:-1] + ((None,) if segmented else ())
+    raise ValueError(plane)
+
+
 def deploy(cfg: ModelConfig, params: Any,
            policy: Optional[Policy] = None,
            fault: Optional[FaultSpec] = None,
-           guard: bool = False) -> Any:
+           guard: Any = False,
+           rules: Optional[ShardingRules] = None,
+           param_axes: Any = None) -> Any:
     """Return a new params tree with pre-quantized weight planes attached.
 
     ``policy`` defaults to the config's SAC policy — the one sim-mode
@@ -104,9 +174,11 @@ def deploy(cfg: ModelConfig, params: Any,
     pass their own config here.
 
     ``guard`` additionally attaches an ABFT checksum plane ``wc<bits>``
-    (int32, the plane summed over output columns — ``core.guard`` compares
-    the analog column sum against ``xq @ wc`` per tile, DESIGN.md §14).
-    The checksum is computed from the *clean* plane, i.e. from what
+    (``core.guard`` compares the analog column sums against ``xq @ wc`` per
+    tile, DESIGN.md §14). Pass a ``GuardSpec`` (or anything with a
+    ``segments`` attribute) to split the checksum into G per-segment
+    columns — ``checksum_plane`` above; ``True`` keeps the PR 6 single
+    column. The checksum is computed from the *clean* plane, i.e. from what
     software intended to program — that is precisely how stuck bitcells
     become detectable.
 
@@ -118,19 +190,43 @@ def deploy(cfg: ModelConfig, params: Any,
     are exempt from both (``_expert_dense`` routes per token; the per-tile
     checksum contract and the guard's dense-plane lookup don't apply —
     documented limitation).
+
+    ``rules`` turns on tensor-parallel deployment: every plane is built
+    exactly as in the single-device path (bit-identical values — the
+    quantization happens once, globally, *then* the plane is placed) and
+    ``jax.device_put`` with the NamedSharding resolved from the plane's
+    derived logical axes (``plane_logical_axes``) distributes it across
+    ``rules.mesh``. ``param_axes`` is the logical-axes tree matching
+    ``params`` (``models.model.param_specs(cfg)[1]``); derived when omitted.
     """
     if policy is None:
         policy = get_policy(cfg.cim.policy)
     if policy is None:
         return params
     dtype = jnp.dtype(cfg.dtype)
+    segments = guard_segments_of(guard)
     fault_key = (jax.random.PRNGKey(fault.seed)
                  if fault is not None and fault.stuck_rate > 0.0 else None)
     plane_idx = [0]   # running walk-order index -> per-plane fault key
 
-    def walk(node, name, parent):
+    if rules is not None and param_axes is None:
+        from repro.models.model import param_specs   # lazy: models -> core
+        param_axes = param_specs(cfg)[1]
+    live = rules is not None and isinstance(rules.mesh, Mesh)
+
+    def place(x, base_names, plane):
+        if not live:
+            return x
+        names = plane_logical_axes(base_names, plane, segmented=segments > 1)
+        if names is None:
+            return x
+        return jax.device_put(
+            x, NamedSharding(rules.mesh, rules.param_spec(names, x.shape)))
+
+    def walk(node, axes, name, parent):
         if not isinstance(node, dict):
             return node
+        axes = axes if isinstance(axes, dict) else {}
         if "w" in node and not isinstance(node["w"], dict):
             role = _role_for(name, parent)
             spec = policy.spec_for_role(role) if role is not None else None
@@ -142,16 +238,24 @@ def deploy(cfg: ModelConfig, params: Any,
                                     reduce_axes=2)
             extra = {f"wq{spec.w_bits}": wq, f"ws{spec.w_bits}": ws}
             if guard:
-                # checksum of the *clean* plane (pre-fault): sum over the
-                # output-column axis, per layer slice
-                extra[f"wc{spec.w_bits}"] = wq.astype(jnp.int32).sum(axis=-1)
+                # checksum of the *clean* plane (pre-fault): per-segment
+                # column-group sums, per layer slice
+                extra[f"wc{spec.w_bits}"] = checksum_plane(wq, segments)
             if fault_key is not None:
                 extra[f"wq{spec.w_bits}"] = stuck_bit_plane(
                     wq, spec.w_bits, fault.stuck_rate,
                     jax.random.fold_in(fault_key, plane_idx[0]))
                 plane_idx[0] += 1
+            wnames = axes.get("w")
+            extra[f"wq{spec.w_bits}"] = place(
+                extra[f"wq{spec.w_bits}"], wnames, "wq")
+            extra[f"ws{spec.w_bits}"] = place(
+                extra[f"ws{spec.w_bits}"], wnames, "ws")
+            if guard:
+                extra[f"wc{spec.w_bits}"] = place(
+                    extra[f"wc{spec.w_bits}"], wnames, "wc")
             return dict(node, **extra)
-        out = {k: walk(v, k, name) for k, v in node.items()}
+        out = {k: walk(v, axes.get(k), k, name) for k, v in node.items()}
         if any(b in node for b in _EXPERT_BANKS):
             spec = policy.spec_for_role("moe_expert")
             if spec is not None:
@@ -162,11 +266,131 @@ def deploy(cfg: ModelConfig, params: Any,
                         wq, ws = quantize_plane(
                             node[b].astype(jnp.float32), spec.w_bits,
                             reduce_axes=3)
-                        out[f"{b}_q{spec.w_bits}"] = wq
-                        out[f"{b}_s{spec.w_bits}"] = ws
+                        out[f"{b}_q{spec.w_bits}"] = place(wq, axes.get(b), "_q")
+                        out[f"{b}_s{spec.w_bits}"] = place(ws, axes.get(b), "_s")
         return out
 
-    return walk(params, None, None)
+    return walk(params, param_axes, None, None)
+
+
+def plan_deploy_sharding(cfg: ModelConfig, rules: ShardingRules,
+                         policy: Optional[Policy] = None,
+                         guard: Any = False) -> Dict[str, Any]:
+    """Dryrun-verify the TP sharding of a config's deployed planes.
+
+    Runs the *same* role resolution and ``plane_logical_axes`` derivation as
+    the live ``deploy(rules=)`` path over ``param_specs(cfg)`` shapes only —
+    no parameter is materialized, and ``rules.mesh`` may be a devices-free
+    ``VirtualMesh`` — so the big configs (deepseek_v2_236b, zamba2_7b) are
+    verifiable on a laptop. Returns per-plane specs plus the aggregate
+    evidence check_floors gates on: every CIM-routed plane resolved, the
+    int8 bytes actually split across the model axis, and per-device bytes
+    == total/degree for each sharded plane (divisibility proof).
+    """
+    from repro.models.model import param_specs   # lazy: models -> core
+    if policy is None:
+        policy = get_policy(cfg.cim.policy)
+    if policy is None:
+        raise ValueError(f"config {cfg.name} has no SAC policy: nothing to deploy")
+    segments = guard_segments_of(guard)
+    pspecs, paxes = param_specs(cfg)
+    tp = tp_axis(rules.mesh)
+    mesh_sizes = dict(rules.mesh.shape)
+    entries = []
+
+    def record(path, plane_key, base_names, plane, shape, itemsize):
+        names = plane_logical_axes(base_names, plane, segmented=segments > 1)
+        spec = rules.param_spec(names, shape) if names is not None else None
+        used = []
+        for s in (tuple(spec) if spec is not None else ()):
+            if s is None:
+                continue
+            used.extend([s] if isinstance(s, str) else list(s))
+        degree = 1
+        for a in used:
+            degree *= mesh_sizes[a]
+        total = itemsize
+        for d in shape:
+            total *= d
+        entries.append({
+            "path": path, "plane": plane_key,
+            "shape": list(shape),
+            "logical_axes": list(names) if names is not None else None,
+            "spec": [list(s) if isinstance(s, tuple) else s
+                     for s in (tuple(spec) if spec is not None else ())],
+            "tp_sharded": tp is not None and tp in used,
+            "shard_degree": degree,
+            "bytes": total,
+            "bytes_per_device": total // degree,
+        })
+
+    def seg_of(n):
+        return pick_segments(n, segments)
+
+    def walk(node, axes, name, parent, path):
+        if not isinstance(node, dict):
+            return
+        axes = axes if isinstance(axes, dict) else {}
+        if "w" in node and not isinstance(node["w"], dict):
+            role = _role_for(name, parent)
+            spec = policy.spec_for_role(role) if role is not None else None
+            if spec is None:
+                return
+            w = node["w"]
+            nbits = spec.w_bits
+            isz = jnp.dtype(quant.storage_dtype(nbits)).itemsize
+            wn = axes.get("w")
+            record(path, f"wq{nbits}", wn, "wq", w.shape, isz)
+            record(path, f"ws{nbits}", wn, "ws", w.shape[:-2],
+                   jnp.dtype(cfg.dtype).itemsize)
+            if guard:
+                wc_shape = (w.shape[:-1] + (seg_of(w.shape[-1]),)
+                            if segments > 1 else w.shape[:-1])
+                record(path, f"wc{nbits}", wn, "wc", wc_shape, 4)
+            return
+        for k, v in node.items():
+            walk(v, axes.get(k), k, name, f"{path}/{k}" if path else k)
+        if any(b in node for b in _EXPERT_BANKS):
+            espec = policy.spec_for_role("moe_expert")
+            if espec is not None:
+                for b in _EXPERT_BANKS:
+                    if b in node:
+                        bshape = node[b].shape
+                        isz = jnp.dtype(quant.storage_dtype(espec.w_bits)).itemsize
+                        record(f"{path}/{b}" if path else b,
+                               f"{b}_q{espec.w_bits}", axes.get(b), "_q",
+                               bshape, isz)
+                        record(f"{path}/{b}" if path else b,
+                               f"{b}_s{espec.w_bits}", axes.get(b), "_s",
+                               bshape[:-3], 4)
+
+    walk(pspecs, paxes, None, None, "")
+    weight_planes = [e for e in entries if e["plane"].startswith(("wq",))
+                     or "_q" in e["plane"]]
+    total = sum(e["bytes"] for e in weight_planes)
+    sharded = [e for e in weight_planes if e["shard_degree"] > 1]
+    tp_planes = [e for e in weight_planes if e["tp_sharded"]]
+    per_dev = sum(e["bytes_per_device"] for e in weight_planes)
+    ok = (len(weight_planes) > 0
+          and all(e["logical_axes"] is not None for e in entries)
+          and (tp is None or len(tp_planes) > 0))
+    return {
+        "config": cfg.name,
+        "mesh": mesh_sizes,
+        "tp_axis": tp,
+        "segments": segments,
+        "planes": len(entries),
+        "weight_planes": len(weight_planes),
+        "tp_sharded_planes": len(tp_planes),
+        "sharded_frac": (len(sharded) / len(weight_planes)
+                         if weight_planes else 0.0),
+        "tp_sharded_frac": (len(tp_planes) / len(weight_planes)
+                            if weight_planes else 0.0),
+        "int8_bytes_total": total,
+        "int8_bytes_per_device": per_dev,
+        "ok": bool(ok),
+        "entries": entries,
+    }
 
 
 _PLANE_KEY = re.compile(r"(^wq|_q)\d+$")

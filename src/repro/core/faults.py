@@ -78,6 +78,58 @@ class FaultSpec:
                 or self.adc_stuck_rate > 0.0 or self.brownout_rate > 0.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaFaultSpec:
+    """One seeded whole-replica failure scenario (PR 10 scale-out).
+
+    Per-macro faults above corrupt individual matmuls; at fleet scale the
+    unit of failure is the *replica* — a device falls off the bus
+    mid-decode, a launch queue wedges, or one replica's macro drifts far
+    harder than its peers. The router (serving/router.py) injects these at
+    its own deterministic step counter so a failover soak replays exactly:
+
+      * ``mode="kill"``: ``Engine.kill()`` at ``at_step`` — device loss;
+        subsequent step/drain raise and undrained device tokens are gone.
+      * ``mode="wedge"``: ``Engine.wedge()`` at ``at_step`` — launches
+        "succeed" but make no progress; only the router's no-progress
+        watchdog can tell.
+      * ``mode="storm"``: no router action — the pool builder constructs
+        the victim with an aggressive per-replica ``FaultSpec``/DriftSpec
+        (``storm_fault()``), so its guard/watchdog health signals degrade
+        persistently and the health score drains it.
+
+    ``victim=None`` derives the victim deterministically from ``seed``.
+    """
+
+    seed: int = 0
+    mode: str = "kill"            # kill | wedge | storm
+    at_step: int = 8              # router step at which kill/wedge fires
+    victim: Optional[int] = None  # replica index; None -> seeded choice
+    storm_transient_mag: float = 64.0   # storm FaultSpec disturbance, sigmas
+
+    def __post_init__(self):
+        if self.mode not in ("kill", "wedge", "storm"):
+            raise ValueError(f"unknown replica fault mode {self.mode!r}")
+
+    def victim_of(self, n_replicas: int) -> int:
+        if self.victim is not None:
+            if not 0 <= self.victim < n_replicas:
+                raise ValueError(
+                    f"victim {self.victim} out of range for {n_replicas}")
+            return self.victim
+        # splitmix-style scramble of the seed — deterministic, spread out
+        z = (self.seed * 0x9E3779B9 + DOMAIN_FAULT) & 0xFFFFFFFF
+        z ^= z >> 16
+        return z % n_replicas
+
+    def storm_fault(self) -> FaultSpec:
+        """The per-replica FaultSpec a drift-storm victim deploys with:
+        every guarded matmul sees a persistent ``storm_transient_mag``-sigma
+        disturbance on faulted rows — hard guard trips and failed requests
+        on that replica only, which is what the health score keys on."""
+        return FaultSpec(seed=self.seed, transient_mag=self.storm_transient_mag)
+
+
 # ---------------------------------------------------------------------------
 # deploy-time: stuck-at bitcells
 # ---------------------------------------------------------------------------

@@ -56,6 +56,14 @@ class GuardSpec:
     threshold_sigmas: float = 6.0  # trip at this many noise sigmas
     retry_votes: int = 12          # rung-1 CB majority votes for the re-read
     rel_floor: float = 1e-5        # f32-rounding floor, relative to |chk|+|s|
+    # checksum segmentation (PR 10): G > 1 deploys G per-segment checksum
+    # columns instead of one whole-row column. Each segment's noise floor
+    # is sqrt(N/G)*sigma instead of sqrt(N)*sigma, so a localized flip of
+    # magnitude m is tested against a sqrt(G)-smaller threshold — dilute
+    # random-signed bitcell flips that hide under the whole-row floor
+    # become detectable (any-segment OR). Must match the deployed plane
+    # (core.deploy.checksum_plane).
+    segments: int = 1
 
 
 def checksum_trips(y: jnp.ndarray, xq: jnp.ndarray, wc: jnp.ndarray,
@@ -63,18 +71,31 @@ def checksum_trips(y: jnp.ndarray, xq: jnp.ndarray, wc: jnp.ndarray,
     """Per-row-position trip decision for one guarded matmul.
 
     ``y``: (..., N) dequantized analog output; ``xq``: (..., K) int32
-    activations; ``wc``: (K,) int32 checksum column; ``unit``: the dequant
-    scale ``xs * ws`` (scalar); ``sigma_deq``: healthy per-element output
-    noise std in y's units. Returns (...,) bool.
+    activations; ``wc``: (K,) int32 whole-row checksum column or (K, G)
+    per-segment checksum columns (``deploy(guard=GuardSpec(segments=G))``);
+    ``unit``: the dequant scale ``xs * ws`` (scalar); ``sigma_deq``:
+    healthy per-element output noise std in y's units. Returns (...,) bool
+    — for segmented checksums a row trips when ANY of its G segment sums
+    disagrees at that segment's (sqrt(G)-tighter) noise scale.
     """
     n = y.shape[-1]
-    chk = jnp.einsum("...k,k->...", xq.astype(jnp.float32),
-                     wc.astype(jnp.float32),
+    xf = xq.astype(jnp.float32)
+    wf = wc.astype(jnp.float32)
+    if wc.ndim == 1:
+        chk = jnp.einsum("...k,k->...", xf, wf,
+                         precision=jax.lax.Precision.HIGHEST) * unit
+        s = jnp.sum(y.astype(jnp.float32), axis=-1)
+        tau = (gs.threshold_sigmas * math.sqrt(n) * sigma_deq
+               + gs.rel_floor * (jnp.abs(chk) + jnp.abs(s)))
+        return jnp.abs(s - chk) > tau
+    g = wc.shape[-1]
+    chk = jnp.einsum("...k,kg->...g", xf, wf,
                      precision=jax.lax.Precision.HIGHEST) * unit
-    s = jnp.sum(y.astype(jnp.float32), axis=-1)
-    tau = (gs.threshold_sigmas * math.sqrt(n) * sigma_deq
+    s = jnp.sum(y.astype(jnp.float32).reshape(y.shape[:-1] + (g, n // g)),
+                axis=-1)
+    tau = (gs.threshold_sigmas * math.sqrt(n / g) * sigma_deq
            + gs.rel_floor * (jnp.abs(chk) + jnp.abs(s)))
-    return jnp.abs(s - chk) > tau
+    return jnp.any(jnp.abs(s - chk) > tau, axis=-1)
 
 
 def _retry_spec(spec: CIMSpec, gs: GuardSpec) -> CIMSpec:

@@ -20,13 +20,13 @@ Entry points:
 
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.distributed.sharding import pvary, shard_map
+from repro.distributed.sharding import dp_axes, pvary, shard_map
 
 
 def _stochastic_round(x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
@@ -57,14 +57,23 @@ def compressed_dp_grads(
     params: Any,
     batch: Any,
     mesh: Mesh,
-    dp_axis: str,
-    key: jax.Array,
+    dp_axis: Optional[str] = None,
+    key: jax.Array = None,
 ) -> Any:
     """Mean gradient over the DP axis with int8-compressed all-reduce.
 
     ``grad_fn(params, local_batch) -> grads`` runs per shard; ``batch`` leaves
     are sharded on dim 0 over ``dp_axis``; ``params`` replicated over it.
+    ``dp_axis=None`` resolves the canonical data axis via ``dp_axes(mesh)``
+    (innermost DP axis — 'data' on both production shapes).
     """
+    if dp_axis is None:
+        dp = dp_axes(mesh)
+        if not dp:
+            raise ValueError(
+                f"mesh {dict(mesh.shape)} has no data-parallel axis "
+                f"(canonical names 'pod'/'data'); pass dp_axis= explicitly")
+        dp_axis = dp[-1]
     n = mesh.shape[dp_axis]
 
     def local(params, local_batch):

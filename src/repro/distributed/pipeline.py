@@ -18,13 +18,14 @@ stack on a fake 4-device mesh (tests/test_pipeline.py).
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.distributed.sharding import pvary as _pvary, shard_map as _shard_map
+from repro.distributed.sharding import (pp_axis, pvary as _pvary,
+                                        shard_map as _shard_map)
 
 
 def pipeline_apply(
@@ -32,7 +33,7 @@ def pipeline_apply(
     stage_params: Any,
     x: jnp.ndarray,
     mesh: Mesh,
-    axis: str = "pod",
+    axis: Optional[str] = None,
     n_micro: int = 4,
 ) -> jnp.ndarray:
     """Run x through n_stage stages living on mesh[axis] (GPipe schedule).
@@ -42,11 +43,18 @@ def pipeline_apply(
         same computation on every stage (layers stacked per stage).
       stage_params: pytree with leading dim n_stages, sharded over `axis`.
       x: (batch, ...) global input; batch % n_micro == 0.
-      mesh/axis: the pipeline axis (stages = mesh.shape[axis]).
+      mesh/axis: the pipeline axis (stages = mesh.shape[axis]); None
+        resolves the canonical pipeline axis via ``pp_axis(mesh)``.
       n_micro: microbatches in flight.
 
     Returns: (batch, ...) output of the full stack.
     """
+    if axis is None:
+        axis = pp_axis(mesh)
+        if axis is None:
+            raise ValueError(
+                f"mesh {dict(mesh.shape)} has no pipeline axis "
+                f"(canonical name 'pod'); pass axis= explicitly")
     n_stage = mesh.shape[axis]
     b = x.shape[0]
     assert b % n_micro == 0, (b, n_micro)

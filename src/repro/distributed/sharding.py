@@ -13,6 +13,16 @@ Default rules (DESIGN.md §7):
 
 Axes whose size does not divide the mesh axis resolve to None (replicated) —
 e.g. qwen2's 14 heads on a 16-way model axis.
+
+Canonical mesh-axis naming (PR 10): every mesh in the repo — production,
+debug, dryrun, replica bench — draws its axis names from ``MESH_AXES`` and
+resolves its roles through ``dp_axes`` / ``tp_axis`` / ``pp_axis``. The
+dryrun helpers used to hardcode single-host names in three places, which
+let a deploy-time spec and a dryrun spec disagree on the same config; now
+one table drives both (``ShardingRules._resolve`` consults only
+``mesh.shape``, so a devices-free ``VirtualMesh`` runs the *identical*
+resolution for configs too big to materialize — that is how the big-config
+sharding plans are dryrun-verified without 256 devices).
 """
 
 from __future__ import annotations
@@ -23,6 +33,70 @@ from typing import Dict, Optional, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# the one canonical axis vocabulary, outermost first: 'pod' = pipeline /
+# cross-pod DCN, 'data' = data parallel (+ FSDP), 'model' = tensor/expert
+# parallel. make_production_mesh/make_debug_mesh, the dryrun, the sharded
+# deploy and the replica bench all build meshes from these names.
+MESH_AXES = ("pod", "data", "model")
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """Axis-name -> size for a Mesh OR a VirtualMesh (anything with a
+    ``.shape`` mapping)."""
+    return dict(mesh.shape)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes present on this mesh, canonical order."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def tp_axis(mesh) -> Optional[str]:
+    """The tensor/expert-parallel axis, or None (pure-DP mesh)."""
+    return "model" if "model" in mesh.shape else None
+
+
+def pp_axis(mesh) -> Optional[str]:
+    """The pipeline axis, or None (single-pod mesh)."""
+    return "pod" if "pod" in mesh.shape else None
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualMesh:
+    """Shape-only mesh stand-in: resolves specs without any devices.
+
+    ``ShardingRules._resolve`` consumes only ``mesh.shape``, so a
+    VirtualMesh drives the exact same logical-axis -> PartitionSpec
+    computation as a live mesh of the same shape — the dryrun-verification
+    path for configs whose parameters (deepseek_v2_236b, zamba2_7b) cannot
+    be materialized on the test host. ``axis_sizes`` keys must come from
+    ``MESH_AXES``.
+    """
+
+    axis_sizes: Tuple[Tuple[str, int], ...]
+
+    @staticmethod
+    def make(**sizes: int) -> "VirtualMesh":
+        bad = [a for a in sizes if a not in MESH_AXES]
+        if bad:
+            raise ValueError(
+                f"unknown mesh axes {bad}: the canonical vocabulary is "
+                f"{MESH_AXES} (distributed.sharding)")
+        ordered = tuple((a, int(sizes[a])) for a in MESH_AXES if a in sizes)
+        return VirtualMesh(axis_sizes=ordered)
+
+    @property
+    def shape(self) -> Dict[str, int]:
+        return dict(self.axis_sizes)
+
+    @property
+    def devices(self):  # parity with Mesh for size accounting
+        import numpy as _np
+        n = 1
+        for _, s in self.axis_sizes:
+            n *= s
+        return _np.empty((n,), object)
 
 # jax >= 0.6 promotes shard_map/pvary to the top level; jax 0.4.x keeps
 # shard_map experimental and has no vma tracking (pvary == identity there).
@@ -81,7 +155,7 @@ class ShardingRules:
 def default_rules(mesh: Mesh, *, seq_sharded: bool = False,
                   fsdp_params: bool = True,
                   seq_axis: AxisVal = None) -> ShardingRules:
-    dp: AxisVal = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp: AxisVal = dp_axes(mesh)
     if len(dp) == 1:
         dp = dp[0]
     if seq_axis is None and seq_sharded and "data" in mesh.shape:

@@ -34,7 +34,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, ShapeConfig, get_shape
 from repro.configs.registry import ASSIGNED, get_config
-from repro.distributed.sharding import ShardingRules, default_rules, use_rules
+from repro.distributed.sharding import (ShardingRules, default_rules, dp_axes,
+                                        tp_axis, use_rules)
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tf_mod
 from repro.models.layers import Ctx
@@ -275,7 +276,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         # cache; replication doesn't fit), SSM (O(1) state, batch=1 work
         # just gets duplicated) and long_500k (already seq-sharded) —
         # measured in EXPERIMENTS §Roofline-optimized notes.
-        model_deg = mesh.shape.get("model", 1)
+        # canonical axis roles resolved through distributed.sharding — the
+        # same helpers the deploy-time plane sharding uses, so a dryrun spec
+        # and a live deploy spec can never disagree on axis names.
+        tp = tp_axis(mesh)
+        dp = dp_axes(mesh)
+        model_deg = mesh.shape.get(tp, 1) if tp else 1
         params_rep_bytes = cfg.param_count() * 2 / model_deg
         replicate_ok = (
             shape.kind == "decode" and not long_ctx and not serve_fsdp
@@ -284,10 +290,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         )
         fsdp = not replicate_ok
         seq_axis = None
-        if long_ctx and seq_shard_long:
-            seq_axis = "data"
+        if long_ctx and seq_shard_long and dp:
+            seq_axis = dp[-1]
         elif replicate_ok:
-            seq_axis = "model"
+            seq_axis = tp
         rules = default_rules(mesh, fsdp_params=fsdp, seq_axis=seq_axis)
     else:
         rules = rules_fn(mesh, cfg, shape)

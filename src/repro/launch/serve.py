@@ -82,6 +82,17 @@ def _build_argparser():
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument(
+        "--replicas", type=int, default=1,
+        help="data-parallel Engine replicas behind the health-aware "
+             "ReplicaRouter (serving/router.py, DESIGN.md §18); each "
+             "replica owns --slots slots and the same seed, so failover "
+             "migration replays streams bit-for-bit in off mode")
+    ap.add_argument(
+        "--guard-segments", type=int, default=1,
+        help="ABFT checksum segments per plane (core/guard.py): G>1 splits "
+             "the checksum into G per-column-group sums, making dilute "
+             "bitcell flips detectable (needs --guard)")
     ap.add_argument("--cim", default="off", choices=["off", "sim"])
     ap.add_argument("--engine", default="fused", choices=["fused", "loop"])
     ap.add_argument(
@@ -252,7 +263,11 @@ def _build_engine(args, cfg, params):
         engine_kw["record_ttft"] = args.ttft
         if args.guard:
             from repro.serving.engine import DegradePolicy
-            engine_kw["guard"] = True
+            if args.guard_segments > 1:
+                from repro.core.guard import GuardSpec
+                engine_kw["guard"] = GuardSpec(segments=args.guard_segments)
+            else:
+                engine_kw["guard"] = True
             if args.fail_after > 0:
                 engine_kw["degrade"] = DegradePolicy(
                     pin_after=1, fail_after=args.fail_after)
@@ -285,9 +300,19 @@ def _build_engine(args, cfg, params):
         raise SystemExit("--drift-*/--calibrate need the fused engine "
                          "(--engine fused): the loop reference engine has "
                          "no drift or calibration path (DESIGN.md §17)")
+    max_len = args.prompt_len + args.new_tokens + 8
+    if args.replicas > 1:
+        if engine_cls is not Engine:
+            raise SystemExit("--replicas needs the fused engine "
+                             "(--engine fused): the router speaks the "
+                             "incremental session API")
+        from repro.serving.router import ReplicaRouter, build_pool
+        engines = build_pool(cfg, params, args.replicas,
+                             max_slots=args.slots, max_len=max_len,
+                             **engine_kw)
+        return ReplicaRouter(engines)
     return engine_cls(cfg, params, max_slots=args.slots,
-                      max_len=args.prompt_len + args.new_tokens + 8,
-                      **engine_kw)
+                      max_len=max_len, **engine_kw)
 
 
 def _run_batch(args, engine, cfg):
@@ -381,6 +406,8 @@ async def _run_frontend(args, engine, cfg):
               f"ttft={'-' if r.ttft_s is None else f'{r.ttft_s:.3f}s'} "
               f"toks={r.tokens_out} votes={r.votes_used} "
               f"retries={r.retries}"
+              + (f" rep={r.replica}" if r.replica is not None else "")
+              + (f" migrations={r.migrations}" if r.migrations else "")
               + (f" guard={r.guard_trips}/{r.guard_hard}"
                  if r.guard_trips is not None else "")
               + (f"  [{r.reason}]" if r.reason else ""))

@@ -110,11 +110,15 @@ class RequestError:
     slot: Optional[int] = None
     layer: Optional[int] = None
     retryable: bool = True
+    # replica that produced the failure (PR 10 scale-out): lets serve.py and
+    # the router attribute failover causes per-replica. None on single-engine.
+    replica: Optional[str] = None
 
     def __str__(self) -> str:
         where = f"slot={self.slot}" if self.slot is not None else "queued"
         lay = f", layer={self.layer}" if self.layer is not None else ""
-        return f"[{self.phase}/{where}{lay}] {self.reason}"
+        rep = f"{self.replica}:" if self.replica is not None else ""
+        return f"[{rep}{self.phase}/{where}{lay}] {self.reason}"
 
 
 @dataclasses.dataclass
@@ -215,7 +219,7 @@ def _resolve_deploy(deploy: Optional[bool], mode: str) -> bool:
 
 
 def _maybe_deploy(cfg: ModelConfig, params: Any, deployed: bool,
-                  fault: Any = None, guard: bool = False) -> Any:
+                  fault: Any = None, guard: Any = False) -> Any:
     if not deployed:
         return params
     from repro.core.deploy import deploy as deploy_params
@@ -276,7 +280,19 @@ class Engine:
                  pin_slots: Any = None,
                  ladder: Any = None,
                  drift: Any = None,
-                 calib: Any = None):
+                 calib: Any = None,
+                 replica: Optional[str] = None):
+        # replica label (PR 10 scale-out): stamped onto every RequestError
+        # this engine produces so the router/serve.py can attribute failover
+        # causes; None for a standalone engine.
+        self.replica = replica
+        # whole-replica failure state (core.faults.ReplicaFaultSpec): a
+        # killed engine simulates device loss — step/drain raise, undrained
+        # device-side tokens are gone; a wedged engine simulates a hung
+        # launch — step "succeeds" but makes no progress. The router detects
+        # both and migrates in-flight requests (serving/router.py).
+        self.dead: Optional[str] = None
+        self.wedged = False
         if cfg.family == "encdec":
             raise ValueError("encdec serving needs per-request encoder "
                              "frames; the token-only engines don't carry them")
@@ -409,8 +425,10 @@ class Engine:
         self.guard_trip_counts = np.zeros(cfg.n_layers, np.int64)
         self.guard_hard_counts = np.zeros(cfg.n_layers, np.int64)
         self.request_errors: List[Optional[RequestError]] = []
+        # the GuardSpec itself is threaded into deploy so the checksum plane
+        # layout (segments) matches what guarded_dense will check against
         self.params = _maybe_deploy(cfg, params, self.deployed, fault=fault,
-                                    guard=self.guard is not None)
+                                    guard=self.guard)
 
         # drift clock + background calibration controller. The step counter
         # is monotonic for the engine's lifetime (macro age — begin() does
@@ -845,6 +863,13 @@ class Engine:
         """One scheduler iteration: expire deadlines (when ``now`` is
         given), admit from the queue, advance every prefilling slot by one
         chunk, run the batch decode. Returns True if any slot did work."""
+        if self.dead is not None:
+            raise RuntimeError(
+                f"replica {self.replica or '?'} dead: {self.dead}")
+        if self.wedged:
+            # a hung launch: the call "succeeds" but nothing advances —
+            # only the router's no-progress watchdog can tell
+            return True
         if now is not None:
             self.expire_deadlines(now)
         self._fill_slots()
@@ -865,8 +890,30 @@ class Engine:
             self.drain_pending()
         return True
 
+    def kill(self, reason: str = "device lost") -> None:
+        """Simulate whole-replica device loss (DESIGN.md §18).
+
+        Every subsequent ``step``/``drain_pending`` raises; tokens emitted
+        on-device but not yet drained are gone (exactly what losing the
+        device means). In-flight requests are NOT failed here — the router
+        migrates them to healthy replicas and their deterministic per-rid
+        sampling keys replay the stream bit-for-bit.
+        """
+        self.dead = reason
+        self._pend.clear()
+
+    def wedge(self) -> None:
+        """Simulate a wedged launch queue: steps no-op without erroring."""
+        self.wedged = True
+
+    def unwedge(self) -> None:
+        self.wedged = False
+
     def drain_pending(self) -> None:
         """Move emitted tokens device→host into ``out_tokens`` lists."""
+        if self.dead is not None:
+            raise RuntimeError(
+                f"replica {self.replica or '?'} dead: {self.dead}")
         if not self._pend:
             return
         vals = jax.device_get([e[1] for e in self._pend])
@@ -996,7 +1043,14 @@ class Engine:
         ri = self._req_index.get(id(r))
         return None if ri is None else self.guard_report.get(ri)
 
+    def replica_of(self, r: Request) -> Optional[str]:
+        """Replica label serving this request (the engine's own label; the
+        router overrides this with the replica it dispatched to)."""
+        return self.replica
+
     def _fail_request(self, s: int, err: RequestError) -> None:
+        if err.replica is None:
+            err.replica = self.replica
         r = self._slots[s]
         ri = self._req_index[id(r)]
         self.status[ri] = "failed"

@@ -424,4 +424,12 @@ class Frontend:
             if rep is not None:
                 t.record.guard_trips = rep["trips"]
                 t.record.guard_hard = rep["hard"]
+            # per-replica attribution (PR 10): which replica served/failed
+            # the request, and how many health-failover migrations it rode
+            rep_of = getattr(self.engine, "replica_of", None)
+            if rep_of is not None:
+                t.record.replica = rep_of(t.request)
+            mig_of = getattr(self.engine, "migrations_of", None)
+            if mig_of is not None:
+                t.record.migrations = mig_of(t.request)
         t._close(outcome, now, reason)

@@ -57,6 +57,8 @@ class RequestRecord:
     retries: int = 0                  # failure-retry attempts consumed
     guard_trips: Optional[int] = None  # ABFT per-request (L,) trip total
     guard_hard: Optional[int] = None   # ... hard-fault (digital-rung) total
+    replica: Optional[str] = None      # replica that finished the request
+    migrations: int = 0                # health-failover re-dispatches (router)
 
     def close(self, outcome: str, now: float,
               reason: Optional[str] = None) -> "RequestRecord":

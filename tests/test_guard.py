@@ -22,7 +22,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_config
-from repro.core.deploy import deploy
+from repro.core.deploy import checksum_plane, deploy, pick_segments
 from repro.core.faults import FaultSpec
 from repro.core.guard import GuardSpec, _retry_spec, checksum_trips
 from repro.core.cim import CIMSpec
@@ -305,3 +305,121 @@ def test_engine_guard_requires_sim_deployed(guard_setup):
     with pytest.raises(ValueError, match="pin_slots requires guard"):
         Engine(cfg, params, max_slots=2, max_len=32, cim_mode="sim", seed=0,
                pin_slots={0})
+
+
+# ---------------------------------------------- segmented checksums (PR 10)
+
+
+def test_segmented_checksum_quiet_and_localised():
+    """Exact integer consistency per segment: clean output trips nothing;
+    a corrupted element trips only its own row."""
+    k = jax.random.PRNGKey(4)
+    xq = jax.random.randint(k, (4, 32), -31, 32, jnp.int32)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (32, 16), -31, 32,
+                            jnp.int32)
+    unit = 0.5
+    y = (xq @ wq).astype(jnp.float32) * unit
+    wc = checksum_plane(wq, segments=4)           # (32, 4)
+    assert wc.shape == (32, 4)
+    gs = GuardSpec(segments=4)
+    assert not bool(jnp.any(checksum_trips(y, xq, wc, unit, 1.0, gs)))
+    y_bad = y.at[2, 5].add(1e4 * unit)
+    trips = np.asarray(checksum_trips(y_bad, xq, wc, unit, 1.0, gs))
+    np.testing.assert_array_equal(trips, [False, False, True, False])
+
+
+def test_segmented_checksum_detects_dilute_flip():
+    """The point of segmentation: a flip whose magnitude hides under the
+    whole-row noise floor (tau ~ sqrt(N)*sigma) clears the per-segment
+    floor (tau ~ sqrt(N/G)*sigma) — detection gain sqrt(G) for localized
+    corruption (DESIGN.md §14)."""
+    n, g = 128, 16
+    xq = jnp.zeros((2, 8), jnp.int32)
+    y = jnp.zeros((2, n), jnp.float32).at[0, 3].set(40.0)
+    gs1 = GuardSpec(threshold_sigmas=6.0, rel_floor=0.0)
+    wc1 = jnp.zeros((8,), jnp.int32)
+    # tau(G=1) = 6*sqrt(128) ~ 67.9 > 40: invisible to the PR 6 checksum
+    assert not bool(jnp.any(checksum_trips(y, xq, wc1, 1.0, 1.0, gs1)))
+    gsg = GuardSpec(threshold_sigmas=6.0, rel_floor=0.0, segments=g)
+    wcg = jnp.zeros((8, g), jnp.int32)
+    # tau(G=16) = 6*sqrt(8) ~ 17.0 < 40: the segment holding col 3 trips
+    np.testing.assert_array_equal(
+        np.asarray(checksum_trips(y, xq, wcg, 1.0, 1.0, gsg)), [True, False])
+
+
+def test_segmented_g1_matches_legacy():
+    """G=1 via the segmented path ((K, 1) checksum) reproduces the legacy
+    (K,) decision bit-for-bit — same sums, same threshold."""
+    k = jax.random.PRNGKey(5)
+    xq = jax.random.randint(k, (3, 16), -15, 16, jnp.int32)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (16, 12), -15, 16,
+                            jnp.int32)
+    y = (xq @ wq).astype(jnp.float32)
+    y = y.at[1, 0].add(500.0)
+    gs = GuardSpec()
+    legacy = checksum_trips(y, xq, checksum_plane(wq), 1.0, 2.0, gs)
+    seg = checksum_trips(y, xq, checksum_plane(wq)[..., None], 1.0, 2.0, gs)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(seg))
+
+
+def test_pick_segments_divisor_fallback():
+    assert pick_segments(128, 16) == 16
+    assert pick_segments(896, 48) == 32    # 896 = 2^7 * 7: next divisor down
+    assert pick_segments(10, 4) == 2
+    assert pick_segments(7, 3) == 1
+    assert pick_segments(16, 100) == 16    # clamped to the plane width
+
+
+def test_deploy_segmented_checksum_planes(guard_setup):
+    """deploy(guard=GuardSpec(segments=G)) emits (..., K, G) checksum
+    planes whose segment sums reduce to the legacy whole-row checksum."""
+    cfg, params = guard_setup
+    dep = deploy(cfg, params, guard=GuardSpec(segments=4))
+
+    def planes(tree, out):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k.startswith("wq"):
+                    out.append((k[2:], tree))
+                elif isinstance(v, dict):
+                    planes(v, out)
+        return out
+
+    found = planes(dep, [])
+    assert found
+    for bits, p in found:
+        wq, wc = p[f"wq{bits}"], p[f"wc{bits}"]
+        g = pick_segments(wq.shape[-1], 4)
+        assert wc.shape == wq.shape[:-1] + (g,)
+        np.testing.assert_array_equal(
+            np.asarray(wc.sum(axis=-1)),
+            np.asarray(jnp.sum(wq.astype(jnp.int32), axis=-1)))
+        np.testing.assert_array_equal(np.asarray(wc),
+                                      np.asarray(checksum_plane(wq, g)))
+
+
+def test_engine_guard_segments_token_identity(guard_setup):
+    """Segmented guard in the serving path: quiet run has zero trips on
+    every layer and greedy tokens identical to the unguarded engine."""
+    cfg, params = guard_setup
+    g = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0,
+               guard=GuardSpec(segments=8))
+    out_g = g.generate(_reqs())
+    u = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0)
+    assert out_g == u.generate(_reqs())
+    assert g.guard_trip_counts.sum() == 0
+    assert g.guard_hard_counts.sum() == 0
+
+
+def test_engine_guard_segments_catch_and_recover(guard_setup):
+    """Segmented guard still drives the full recovery ladder: the hard
+    transient on slot 1 ends pinned digital, token-equal to cim='off'."""
+    cfg, params = guard_setup
+    fault = FaultSpec(transient_mag=4.0)
+    a = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="sim", seed=0,
+               guard=GuardSpec(segments=8), fault=fault, fault_slots={1})
+    out_a = a.generate(_reqs())
+    out_off = Engine(cfg, params, max_slots=3, max_len=64, cim_mode="off",
+                     seed=0).generate(_reqs())
+    assert out_a[1] == out_off[1]
+    assert a.guard_hard_counts.sum() > 0
